@@ -1,0 +1,33 @@
+"""Figure 10 — TE-Load study: DRAM-hit vs DRAM-miss vs theoretical PCIe
+bound, and NPU-fork over the scaled-up (ICI/HCCS) vs scaled-out (DCN/RoCE)
+fabrics, for three model sizes. Tier T3 + real DistFlow broadcast."""
+from __future__ import annotations
+
+from repro.core import DRAMPageCache, ModelAsset, ModelLoader
+from repro.engine.distflow import DistFlow
+
+
+def run() -> list:
+    rows = []
+    for asset in (ModelAsset("llama3-8b", 16e9, tp=1),
+                  ModelAsset("34b", 68e9, tp=4),
+                  ModelAsset("llama3-70b", 140e9, tp=8)):
+        dram = DRAMPageCache()
+        loader = ModelLoader(dram)
+        miss = loader.local_load(asset, n_parallel_tes=asset.tp)
+        hit = loader.local_load(asset, n_parallel_tes=asset.tp)
+        theo = loader.theoretical(asset)
+        src = DistFlow("src")
+        ici = loader.npu_fork(asset, src, [DistFlow("a")], link="ici")
+        dcn = loader.npu_fork(asset, src, [DistFlow("b")], link="dcn")
+        rows.append((f"fig10_{asset.name}_dram_miss_s", miss.seconds * 1e6, miss.path))
+        rows.append((f"fig10_{asset.name}_dram_hit_s", hit.seconds * 1e6, hit.path))
+        rows.append((f"fig10_{asset.name}_theoretical_s", theo * 1e6, "weights/PCIe"))
+        rows.append((f"fig10_{asset.name}_npufork_ici_s", ici.seconds * 1e6, ""))
+        rows.append((f"fig10_{asset.name}_npufork_dcn_s", dcn.seconds * 1e6, ""))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

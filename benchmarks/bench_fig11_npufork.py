@@ -1,0 +1,36 @@
+"""Figure 11 — NPU-fork scalability and sensitivity (Llama3-8B TP=1 over
+the scaled-up fabric): (a) parallel fork to N TEs, (b) source busy
+prefilling, (c) source busy decoding. Tier T3 + real DistFlow broadcast."""
+from __future__ import annotations
+
+from repro.core import DRAMPageCache, ModelAsset, ModelLoader
+from repro.engine.distflow import DistFlow
+
+ASSET = ModelAsset("llama3-8b", 16e9, tp=1)
+
+
+def run() -> list:
+    loader = ModelLoader(DRAMPageCache())
+    rows = []
+    for n in (1, 2, 4, 8, 16, 32, 64):
+        src = DistFlow("src")
+        r = loader.npu_fork(ASSET, src, [DistFlow(f"t{i}") for i in range(n)],
+                            link="ici")
+        rows.append((f"fig11a_fork_x{n}_s", r.seconds * 1e6,
+                     f"per_te={r.seconds:.2f}s"))
+    for busy, label in ((0.0, "idle"), (0.5, "prefill_4k"), (1.0, "prefill_32k")):
+        src = DistFlow("src")
+        r = loader.npu_fork(ASSET, src, [DistFlow(f"t{i}") for i in range(32)],
+                            link="ici", source_busy_frac=busy)
+        rows.append((f"fig11b_src_{label}_s", r.seconds * 1e6, ""))
+    for batch in (0, 8, 32, 128):
+        src = DistFlow("src")
+        r = loader.npu_fork(ASSET, src, [DistFlow(f"t{i}") for i in range(32)],
+                            link="ici", source_busy_frac=min(1.0, batch / 128))
+        rows.append((f"fig11c_decode_b{batch}_s", r.seconds * 1e6, ""))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,32 @@
+"""Figure 6 — PD-disaggregated vs PD-colocated JCT-ratio heatmap.
+
+Full-scale grid from the analytic cost model (T3, 34B TP=4 like the paper)
+plus the §5.3.2 combination step (element-wise sum over RPS) and the
+stability statistic the paper quotes (>80% of cells sign-consistent)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.bench_fig4_pd_online import CFG_34B
+from repro.core.heatmap import HeatmapStudy
+from repro.core.perf_model import TEHardware
+
+
+def run() -> list:
+    hs = HeatmapStudy(CFG_34B, TEHardware(n_chips=4))
+    combined = hs.combined()
+    stab = hs.stability()
+    rows = [("fig6_stability_fraction", 0.0, f"frac={stab:.3f} (paper: >0.80)")]
+    pos = float(np.mean(combined > 0))
+    rows.append(("fig6_cells_pd_disagg_wins", 0.0, f"frac={pos:.3f}"))
+    rows.append(("fig6_max_disagg_advantage", 0.0, f"val={combined.max():.2f}"))
+    rows.append(("fig6_max_colo_advantage", 0.0, f"val={-combined.min():.2f}"))
+    for i, pl in enumerate(hs.prefill_lens):
+        cells = " ".join(f"{combined[i, j]:+.2f}" for j in range(len(hs.decode_ratios)))
+        rows.append((f"fig6_row_p{pl}", 0.0, cells))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,83 @@
+"""Figure 7 — distributed scheduling study: RR vs PD-aware vs combined.
+
+Paper setup: 34B TP=4; cluster = 2 PD-colocated TEs + one 1P1D pair;
+code-generation trace. Tier T3 sim + the real Algorithm-1 code. Reported:
+mean/p90 JCT and TPOT per policy per RPS."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.bench_fig4_pd_online import CFG_34B
+from benchmarks.simcluster import SimTE, poisson_trace, run_cluster
+from repro.core.heatmap import HeatmapStudy
+from repro.core.perf_model import TECostModel, TEHardware
+from repro.core.scheduling import (DistributedScheduler, SchedRequest,
+                                   TEHandle)
+
+
+def _cluster():
+    cost = TECostModel(CFG_34B, TEHardware(n_chips=4))
+    return [SimTE("c0", "colocated", cost), SimTE("c1", "colocated", cost),
+            SimTE("pd0", "pd_pair", cost)]
+
+
+def _codegen_trace(rps, seed=1):
+    # code-gen service: medium prompts, long decodes (bimodal)
+    def sampler(rng):
+        if rng.rand() < 0.5:
+            return int(rng.choice([1024, 2048])), int(rng.choice([256, 512]))
+        return int(rng.choice([256, 512])), int(rng.choice([32, 64]))
+    return poisson_trace(rps, duration=90.0, seed=seed, p_sampler=sampler)
+
+
+def _policy(tes, name):
+    if name == "rr":
+        state = {"i": 0}
+
+        def pick(req):
+            te = tes[state["i"] % len(tes)]
+            state["i"] += 1
+            return te
+        return pick
+
+    hs = HeatmapStudy(CFG_34B, TEHardware(n_chips=4))
+    handles = [TEHandle(te.te_id, te.te_type) for te in tes]
+    by_id = {te.te_id: te for te in tes}
+    ds = DistributedScheduler(handles, hs.combined(), hs.prefill_lens,
+                              hs.decode_ratios)
+
+    def pick_pd(req):
+        sreq = SchedRequest(tokens=[0] * req.p_len, predicted_decode=req.d_len)
+        if name == "pd":
+            sub = ds.pd_aware(sreq, list(ds.tes.values()))
+            h = min(sub, key=lambda t: by_id[t.te_id].load())
+        else:  # combined
+            for h2 in ds.tes.values():
+                h2.load = by_id[h2.te_id].load()
+            h = ds.dist_sched(sreq)
+        ds.commit(sreq, h)
+        return by_id[h.te_id]
+
+    return pick_pd
+
+
+def run() -> list:
+    rows = []
+    for rps in (0.5, 1.0, 2.0):
+        for pol in ("rr", "pd", "combined"):
+            tes = _cluster()
+            done = run_cluster(tes, _codegen_trace(rps), _policy(tes, pol),
+                               horizon=400.0)
+            if not done:
+                continue
+            jct = float(np.mean([r.jct for r in done]))
+            p90 = float(np.percentile([r.jct for r in done], 90))
+            tpot = float(np.mean([r.tpot for r in done])) * 1e3
+            rows.append((f"fig7_{pol}_rps{rps}", jct * 1e6,
+                         f"jct={jct:.2f};p90={p90:.2f};tpot_ms={tpot:.1f};n={len(done)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

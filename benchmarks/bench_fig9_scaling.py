@@ -1,0 +1,30 @@
+"""Figure 9 — end-to-end scaling latency breakdown before/after the §6
+optimizations (pre-warmed pods/TEs, DRAM preload, offline-profiled warmup,
+proactive push). Tier T3 (timing model; state machines are real)."""
+from __future__ import annotations
+
+from repro.core import DRAMPageCache, FastScaler, ModelAsset
+
+
+def run() -> list:
+    rows = []
+    for asset in (ModelAsset("7b", 14e9, tp=1), ModelAsset("34b", 68e9, tp=4),
+                  ModelAsset("70b", 140e9, tp=8)):
+        scaler = FastScaler(DRAMPageCache())
+        scaler.dram.preload(asset)
+        before = scaler.scale_one(asset, optimized=False)
+        scaler2 = FastScaler(DRAMPageCache())
+        scaler2.dram.preload(asset)
+        after = scaler2.scale_one(asset, optimized=True)
+        for name, ev in (("before", before), ("after", after)):
+            detail = ";".join(f"{k}={v:.2f}s" for k, v in ev.steps.items())
+            rows.append((f"fig9_{asset.name}_{name}_total_s", ev.total * 1e6,
+                         detail))
+        rows.append((f"fig9_{asset.name}_speedup", 0.0,
+                     f"x={before.total / after.total:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,39 @@
+"""Roofline table (deliverable g): reads artifacts/dryrun.jsonl (written by
+repro.launch.dryrun --probes) and prints per-cell terms. Tier T2."""
+from __future__ import annotations
+
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                   "dryrun_probes.jsonl")
+
+
+def run() -> list:
+    rows = []
+    if not os.path.exists(ART):
+        return [("roofline_table", 0.0,
+                 f"missing {ART}: run `python -m repro.launch.dryrun --probes`")]
+    with open(ART) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if r.get("status") != "ok" or "roofline" not in r:
+                continue
+            rf = r["roofline"]
+            step = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+            ideal = rf["model_flops"] / (r["n_chips"] * 197e12)
+            frac = ideal / step if step else 0.0
+            rows.append((f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+                         step * 1e6,
+                         f"compute={rf['compute_s']:.2e};mem={rf['memory_s']:.2e};"
+                         f"coll={rf['collective_s']:.2e};dom={rf['dominant']};"
+                         f"roofline_frac={frac:.3f};useful={rf['useful_ratio']:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

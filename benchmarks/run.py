@@ -1,0 +1,56 @@
+"""Benchmark harness: one module per paper table/figure (DESIGN.md §6).
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig3,fig6,...]
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+
+MODULES = [
+    ("table1", "benchmarks.bench_table1_rtc"),
+    ("fig3", "benchmarks.bench_fig3_async_sched"),
+    ("fig4", "benchmarks.bench_fig4_pd_online"),
+    ("fig6", "benchmarks.bench_fig6_heatmap"),
+    ("fig7", "benchmarks.bench_fig7_dist_sched"),
+    ("predictor", "benchmarks.bench_predictor"),
+    ("fig9", "benchmarks.bench_fig9_scaling"),
+    ("fig10", "benchmarks.bench_fig10_teload"),
+    ("fig11", "benchmarks.bench_fig11_npufork"),
+    ("roofline", "benchmarks.bench_roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench keys (e.g. fig3,fig6)")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for key, modname in MODULES:
+        if only and key not in only:
+            continue
+        t0 = time.monotonic()
+        try:
+            mod = importlib.import_module(modname)
+            rows = mod.run()
+        except Exception as e:  # noqa: BLE001
+            print(f"{key}_ERROR,0,{e!r}")
+            failures += 1
+            continue
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+        print(f"{key}_wall_s,{(time.monotonic() - t0) * 1e6:.0f},")
+        sys.stdout.flush()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

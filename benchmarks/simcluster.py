@@ -1,0 +1,140 @@
+"""Calibrated cluster simulation (fidelity tier T3) shared by the online
+benchmarks (Figures 4 and 7).
+
+Each simulated TE prices work with repro.core.perf_model.TECostModel (the
+same model the heatmap study uses); the schedulers under test are the real
+repro.core.scheduling policies. Requests arrive Poisson; each TE runs a
+simple processor-sharing queue over its decode batch with chunked-prefill
+interference for colocated TEs.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.perf_model import TECostModel, TEHardware
+
+
+@dataclass
+class SimRequest:
+    rid: int
+    arrival: float
+    p_len: int
+    d_len: int
+    start_service: float = -1.0
+    first_token: float = -1.0
+    finish: float = -1.0
+
+    @property
+    def jct(self) -> float:
+        return self.finish - self.arrival
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token - self.arrival
+
+    @property
+    def tpot(self) -> float:
+        return (self.finish - self.first_token) / max(self.d_len - 1, 1)
+
+
+class SimTE:
+    """One serving endpoint: 'colocated' (chunked prefill shares steps with
+    decode) or 'pd_pair' (dedicated prefill stage feeding a decode stage)."""
+
+    def __init__(self, te_id: str, te_type: str, cost: TECostModel,
+                 max_batch: int = 16):
+        self.te_id = te_id
+        self.te_type = te_type
+        self.cost = cost
+        self.max_batch = max_batch
+        self.queue: List[SimRequest] = []      # waiting for prefill
+        self.decoding: List[Tuple[SimRequest, int]] = []  # (req, tokens left)
+        self.prefill_free_at = 0.0
+        self.now = 0.0
+        self.done: List[SimRequest] = []
+
+    def submit(self, req: SimRequest) -> None:
+        self.queue.append(req)
+
+    def load(self) -> float:
+        return (sum(r.p_len + r.d_len for r in self.queue)
+                + sum(t for _, t in self.decoding))
+
+    def step(self, dt_target: float) -> float:
+        """Advance the TE by roughly dt_target seconds; returns actual dt."""
+        # admit prefills
+        while self.queue and len(self.decoding) < self.max_batch \
+                and self.prefill_free_at <= self.now:
+            req = self.queue.pop(0)
+            req.start_service = max(self.now, req.arrival)
+            t_p = self.cost.prefill_time(req.p_len)
+            if self.te_type == "pd_pair":
+                # dedicated prefill instance + KV transfer
+                t_p += self.cost.kv_bytes_per_token * req.p_len / 50e9
+            self.prefill_free_at = req.start_service + t_p
+            req.first_token = self.prefill_free_at
+            self.decoding.append((req, req.d_len))
+        if not self.decoding:
+            self.now += dt_target
+            return dt_target
+        batch = len(self.decoding)
+        avg_ctx = int(np.mean([r.p_len + (r.d_len - left)
+                               for r, left in self.decoding]))
+        step_t = self.cost.decode_step_time(batch, avg_ctx)
+        if self.te_type == "colocated" and self.prefill_free_at > self.now:
+            step_t *= 1.35  # chunked-prefill interference on decode steps
+        steps = max(1, int(dt_target / step_t))
+        self.now += steps * step_t
+        nxt = []
+        for req, left in self.decoding:
+            left -= steps
+            if left <= 0:
+                req.finish = self.now
+                self.done.append(req)
+            else:
+                nxt.append((req, left))
+        self.decoding = nxt
+        return steps * step_t
+
+
+def poisson_trace(rps: float, duration: float, seed: int = 0,
+                  p_sampler: Optional[Callable] = None) -> List[SimRequest]:
+    rng = np.random.RandomState(seed)
+    t, out, rid = 0.0, [], 0
+    while t < duration:
+        t += rng.exponential(1.0 / rps)
+        if p_sampler is None:
+            p_len = int(rng.choice([512, 1024, 2048, 4096]))
+            d_len = max(8, int(p_len * rng.choice([0.05, 0.1, 0.25, 0.5])))
+        else:
+            p_len, d_len = p_sampler(rng)
+        out.append(SimRequest(rid, t, p_len, d_len))
+        rid += 1
+    return out
+
+
+def run_cluster(tes: List[SimTE], trace: List[SimRequest],
+                pick: Callable[[SimRequest], SimTE],
+                horizon: float = 1e9) -> List[SimRequest]:
+    """Drive arrivals through `pick` and advance all TEs in lockstep."""
+    trace = sorted(trace, key=lambda r: r.arrival)
+    i = 0
+    now = 0.0
+    dt = 0.05
+    while i < len(trace) or any(te.decoding or te.queue for te in tes):
+        while i < len(trace) and trace[i].arrival <= now:
+            pick(trace[i]).submit(trace[i])
+            i += 1
+        for te in tes:
+            te.now = max(te.now, now)
+            te.step(dt)
+        now += dt
+        if now > horizon:
+            break
+    return [r for te in tes for r in te.done]

@@ -1,0 +1,5 @@
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, MoEConfig, EncoderConfig, VisionConfig, RWKVConfig, RGLRUConfig,
+    ShapeConfig, SHAPES, shape_applicable, get_config, list_configs, register,
+    smoke_config,
+)

@@ -1,0 +1,180 @@
+"""Cluster manager + Job/Task executors (§3) and the AUTOSCALER (§6).
+
+The cluster manager is the HA control plane: TE-group membership, health
+(heartbeats, reboot-on-failure per §7), and scaling triggered by load /
+SLO-violation metrics. JEs pull requests, decompose them (request-job-task)
+and drive the distributed scheduler; TEs wrap FLOWSERVE engines behind the
+TE-shell (health + scaling hooks).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.abstractions import (Job, JobKind, Status, Task, TaskKind,
+                                     UserRequest, decompose)
+from repro.core.scaling import FastScaler, ModelAsset
+from repro.core.scheduling import DistributedScheduler, SchedRequest, TEHandle
+
+
+# ---------------------------------------------------------------------------
+# Task executor (TE-shell around an engine)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TaskExecutor:
+    te_id: str
+    te_type: str                         # "colocated" | "prefill" | "decode"
+    engine: Any = None                   # FlowServe (live) or sim cost model
+    healthy: bool = True
+    last_heartbeat: float = field(default_factory=time.monotonic)
+    tasks_done: int = 0
+
+    def heartbeat(self) -> None:
+        self.last_heartbeat = time.monotonic()
+
+    def fail(self) -> None:
+        self.healthy = False
+
+    def reboot(self) -> None:
+        """§7: reboot the component; RTC state is soft (recomputed), so no
+        consistency protocol is needed."""
+        self.healthy = True
+        self.heartbeat()
+        if self.engine is not None and getattr(self.engine, "rtc", None) is not None:
+            # soft state: drop the prefix index; pages are reclaimed lazily
+            from repro.engine.rtc import RelationalTensorCache
+            eng = self.engine
+            eng.rtc = RelationalTensorCache(eng.pool, eng.rtc.cost)
+            eng.scheduler.rtc = eng.rtc
+
+
+# ---------------------------------------------------------------------------
+# Job executor
+# ---------------------------------------------------------------------------
+
+
+class JobExecutor:
+    """Model-serving JE: decomposes requests and dispatches tasks to TEs via
+    the distributed scheduler (Algorithm 1)."""
+
+    def __init__(self, je_id: str, scheduler: DistributedScheduler,
+                 dispatch: Callable[[Task, TEHandle], Any]):
+        self.je_id = je_id
+        self.scheduler = scheduler
+        self.dispatch = dispatch
+        self.jobs: Dict[str, Job] = {}
+        self.healthy = True
+
+    def handle(self, request: UserRequest) -> List[Job]:
+        jobs = decompose(request)
+        for job in jobs:
+            self.jobs[job.job_id] = job
+            if job.kind == JobKind.SERVING:
+                self._serve(job)
+            else:
+                # post-training jobs: one shard task (training substrate)
+                task = job.spawn(TaskKind.TRAIN_SHARD if job.kind == JobKind.TRAINING
+                                 else TaskKind.PREPROCESS_SHARD,
+                                 payload=request.payload)
+                task.status = Status.PENDING
+        return jobs
+
+    def _serve(self, job: Job) -> None:
+        tokens = job.request.payload["tokens"]
+        sreq = SchedRequest(tokens=tokens,
+                            predicted_decode=job.request.payload.get("max_new_tokens", 128))
+        te = self.scheduler.dist_sched(sreq)
+        self.scheduler.commit(sreq, te)
+        if te.te_type == "pd_pair":
+            t1 = job.spawn(TaskKind.PREFILL, tokens=tokens)
+            t2 = job.spawn(TaskKind.DECODE, tokens=tokens)
+            t1.te_id = te.te_id + "/prefill"
+            t2.te_id = te.te_id + "/decode"
+            self.dispatch(t1, te)
+            self.dispatch(t2, te)
+        else:
+            t = job.spawn(TaskKind.COLOCATED, tokens=tokens)
+            t.te_id = te.te_id
+            self.dispatch(t, te)
+
+
+# ---------------------------------------------------------------------------
+# Cluster manager + autoscaler
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class AutoscalerConfig:
+    high_load: float = 0.80              # scale-up trigger (pool utilization)
+    low_load: float = 0.25               # scale-down trigger
+    slo_violation_rate: float = 0.05
+    cooldown_s: float = 5.0
+    max_tes: int = 64
+    min_tes: int = 1
+
+
+class ClusterManager:
+    """Centralized HA module: membership, health, autoscaling."""
+
+    def __init__(self, scaler: FastScaler, asset: ModelAsset,
+                 cfg: AutoscalerConfig = AutoscalerConfig(),
+                 te_factory: Optional[Callable[[str], TaskExecutor]] = None,
+                 heartbeat_timeout: float = 10.0):
+        self.scaler = scaler
+        self.asset = asset
+        self.cfg = cfg
+        self.te_factory = te_factory or (lambda te_id: TaskExecutor(te_id, "colocated"))
+        self.tes: Dict[str, TaskExecutor] = {}
+        self.jes: Dict[str, JobExecutor] = {}
+        self._last_scale = 0.0
+        self.heartbeat_timeout = heartbeat_timeout
+        self.scale_log: List[Dict[str, Any]] = []
+
+    # ------------------------------------------------------------- health
+    def check_health(self) -> List[str]:
+        """Reboot TEs whose heartbeat lapsed (§7 fault recovery)."""
+        rebooted = []
+        now = time.monotonic()
+        for te in self.tes.values():
+            if not te.healthy or now - te.last_heartbeat > self.heartbeat_timeout:
+                te.reboot()
+                rebooted.append(te.te_id)
+        return rebooted
+
+    # ------------------------------------------------------------- scaling
+    def autoscale(self, load: float, slo_violations: float,
+                  now: Optional[float] = None) -> int:
+        """Returns TE delta applied (positive = scaled up)."""
+        now = now if now is not None else time.monotonic()
+        if now - self._last_scale < self.cfg.cooldown_s:
+            return 0
+        n = len(self.tes)
+        delta = 0
+        if (load > self.cfg.high_load or slo_violations > self.cfg.slo_violation_rate) \
+                and n < self.cfg.max_tes:
+            delta = min(max(1, n), self.cfg.max_tes - n)   # double, capped
+            for _ in range(delta):
+                ev = self.scaler.scale_one(self.asset, optimized=True)
+                te = self.te_factory(f"te-{len(self.tes)}")
+                self.tes[te.te_id] = te
+                self.scale_log.append({"dir": "up", "event": ev.total,
+                                       "path": ev.path, "t": now})
+        elif load < self.cfg.low_load and n > self.cfg.min_tes:
+            delta = -1
+            victim = next(reversed(self.tes))
+            self.scaler.release(victim)
+            del self.tes[victim]
+            self.scale_log.append({"dir": "down", "t": now})
+        if delta:
+            self._last_scale = now
+        return delta
+
+    def register_te(self, te: TaskExecutor) -> None:
+        self.tes[te.te_id] = te
+
+    def register_je(self, je: JobExecutor) -> None:
+        self.jes[je.je_id] = je

@@ -1,0 +1,74 @@
+"""Analytic serving-performance model (fidelity tier T3, DESIGN.md §3).
+
+Calibrated from the dry-run roofline terms and the v5e hardware constants,
+this model prices prefill/decode work on a TE so cluster-scale experiments
+(Figures 4, 6, 7) exercise the *real* scheduling code against realistic
+timings. The paper measures the same quantities on Ascend hardware.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.configs.base import ModelConfig
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip (v5e)
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+MFU_PREFILL = 0.55         # achievable fraction of peak in prefill
+MBU_DECODE = 0.70          # achievable fraction of HBM bw in decode
+STEP_OVERHEAD = 2.0e-3     # per-engine-step host/dispatch overhead (s)
+
+
+@dataclass
+class TEHardware:
+    n_chips: int = 4                     # e.g. TP=4 like the paper's 34B tests
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = HBM_BW
+
+
+@dataclass
+class TECostModel:
+    """Prices one TE's work for a given model config."""
+    cfg: ModelConfig
+    hw: TEHardware = field(default_factory=TEHardware)
+    kv_bytes_per_token: Optional[float] = None
+
+    def __post_init__(self):
+        c = self.cfg
+        if self.kv_bytes_per_token is None:
+            la = sum(1 for k in c.layer_kinds() if k.startswith("attn"))
+            self.kv_bytes_per_token = 2 * la * c.n_kv_heads * c.head_dim * 2  # bf16
+
+    # ------------------------------------------------------------ prefill
+    def prefill_time(self, n_tokens: int, kv_context: int = 0) -> float:
+        """Compute-bound: 2·N_active FLOPs/token + attention quadratic term."""
+        c = self.cfg
+        flops = 2.0 * c.active_param_count() * n_tokens
+        # attention score/AV FLOPs: 4 * L * H * hd * S_kv per token
+        la = sum(1 for k in c.layer_kinds() if k.startswith("attn"))
+        avg_ctx = kv_context + n_tokens / 2
+        if c.window:
+            avg_ctx = min(avg_ctx, c.window)
+        flops += 4.0 * la * c.n_heads * c.head_dim * avg_ctx * n_tokens
+        return flops / (self.hw.n_chips * self.hw.peak_flops * MFU_PREFILL)
+
+    # ------------------------------------------------------------ decode
+    def decode_step_time(self, batch: int, avg_context: int) -> float:
+        """Memory-bound: stream weights once per step + KV per sequence."""
+        c = self.cfg
+        weight_bytes = 2.0 * c.active_param_count()     # bf16
+        ctx = min(avg_context, c.window) if c.window else avg_context
+        kv_bytes = batch * self.kv_bytes_per_token * ctx
+        t_mem = (weight_bytes + kv_bytes) / (self.hw.n_chips * self.hw.hbm_bw * MBU_DECODE)
+        t_flops = (2.0 * c.active_param_count() * batch
+                   / (self.hw.n_chips * self.hw.peak_flops * MFU_PREFILL))
+        return max(t_mem, t_flops) + STEP_OVERHEAD
+
+    def decode_time(self, n_tokens: int, batch: int, context0: int) -> float:
+        """Total time to emit n_tokens per sequence at a fixed batch."""
+        total = 0.0
+        for i in range(n_tokens):
+            total += self.decode_step_time(batch, context0 + i)
+        return total

@@ -1,0 +1,139 @@
+"""Decode-length predict model (§5.3.3).
+
+TetriServe-style: a lightweight classifier buckets the expected decode
+length (bucket granularity 128 tokens in the paper; configurable here).
+The paper trains OPT-125M on (prompt → observed target-LLM decode length);
+we train a small JAX MLP over bag-of-token-features on a synthetically
+generated corpus whose decode lengths correlate with prompt statistics the
+way real traces do (code prompts → long, short chat → short). The paper
+reports 84.9% accuracy; our target is ≥80% on the held-out split, which
+benchmarks/bench_predictor.py verifies.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class PredictorConfig:
+    bucket_size: int = 128
+    n_buckets: int = 8
+    n_features: int = 64
+    hidden: int = 128
+    lr: float = 3e-3
+    steps: int = 300
+    batch: int = 256
+
+
+def featurize(prompt_tokens: np.ndarray, n_features: int) -> np.ndarray:
+    """Cheap prompt features: length stats + hashed bag-of-tokens."""
+    f = np.zeros((n_features,), np.float32)
+    n = len(prompt_tokens)
+    f[0] = math.log1p(n) / 10.0
+    f[1] = (n % 97) / 97.0
+    if n:
+        f[2] = float(np.mean(prompt_tokens)) / 260.0
+        f[3] = float(np.std(prompt_tokens)) / 130.0
+        idx = (prompt_tokens * 2654435761 % (n_features - 4)).astype(np.int64)
+        np.add.at(f, 4 + idx, 1.0 / max(n, 1))
+    return f
+
+
+def synth_trace(n: int, cfg: PredictorConfig, seed: int = 0
+                ) -> Tuple[np.ndarray, np.ndarray, List[np.ndarray]]:
+    """Synthetic (prompt, decode-length) pairs with learnable structure:
+    three latent request classes (chat / code / summarize) with different
+    token distributions and decode-length regimes + noise."""
+    rng = np.random.RandomState(seed)
+    xs, ys, prompts = [], [], []
+    for _ in range(n):
+        cls = rng.randint(3)
+        if cls == 0:    # chat: short prompt, short decode
+            plen = rng.randint(8, 64)
+            toks = rng.randint(3, 120, plen)
+            dlen = 40 + plen + int(rng.randn() * 14)
+        elif cls == 1:  # code: marker tokens, long decode
+            plen = rng.randint(32, 256)
+            toks = np.concatenate([rng.randint(120, 200, plen - 4), [123, 125, 40, 41]])
+            dlen = 520 + plen // 2 + int(rng.randn() * 36)
+        else:           # summarize: long prompt, medium decode
+            plen = rng.randint(256, 512)
+            toks = rng.randint(3, 255, plen)
+            dlen = 140 + plen // 4 + int(rng.randn() * 24)
+        dlen = int(np.clip(dlen, 1, cfg.bucket_size * cfg.n_buckets - 1))
+        xs.append(featurize(toks, cfg.n_features))
+        ys.append(dlen // cfg.bucket_size)
+        prompts.append(toks)
+    return np.stack(xs), np.asarray(ys, np.int32), prompts
+
+
+def init_predictor(cfg: PredictorConfig, key) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (cfg.n_features, cfg.hidden)) * (1 / math.sqrt(cfg.n_features)),
+        "b1": jnp.zeros((cfg.hidden,)),
+        "w2": jax.random.normal(k2, (cfg.hidden, cfg.n_buckets)) * (1 / math.sqrt(cfg.hidden)),
+        "b2": jnp.zeros((cfg.n_buckets,)),
+    }
+
+
+def predictor_logits(params: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def train_predictor(cfg: PredictorConfig, xs: np.ndarray, ys: np.ndarray,
+                    seed: int = 0) -> Tuple[dict, float]:
+    """Adam-trained classifier; returns (params, held-out accuracy)."""
+    n = len(xs)
+    n_tr = int(n * 0.8)
+    xtr, ytr = jnp.asarray(xs[:n_tr]), jnp.asarray(ys[:n_tr])
+    xte, yte = jnp.asarray(xs[n_tr:]), jnp.asarray(ys[n_tr:])
+    params = init_predictor(cfg, jax.random.PRNGKey(seed))
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+
+    def loss_fn(p, xb, yb):
+        lg = predictor_logits(p, xb)
+        return -jnp.mean(jnp.take_along_axis(jax.nn.log_softmax(lg), yb[:, None], 1))
+
+    @jax.jit
+    def step(p, m, v, xb, yb, t):
+        g = jax.grad(loss_fn)(p, xb, yb)
+        m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+        mh = jax.tree.map(lambda a: a / (1 - 0.9 ** t), m)
+        vh = jax.tree.map(lambda a: a / (1 - 0.999 ** t), v)
+        p = jax.tree.map(lambda a, mm, vv: a - cfg.lr * mm / (jnp.sqrt(vv) + 1e-8),
+                         p, mh, vh)
+        return p, m, v
+
+    rng = np.random.RandomState(seed)
+    for t in range(1, cfg.steps + 1):
+        idx = rng.randint(0, n_tr, cfg.batch)
+        params, m, v = step(params, m, v, xtr[idx], ytr[idx], t)
+    acc = float(jnp.mean(jnp.argmax(predictor_logits(params, xte), -1) == yte))
+    return params, acc
+
+
+class DecodeLengthPredictor:
+    """Inference-side wrapper used by PD-aware scheduling."""
+
+    def __init__(self, cfg: PredictorConfig, params: dict):
+        self.cfg = cfg
+        self.params = params
+        self._fn = jax.jit(lambda x: jnp.argmax(predictor_logits(params, x), -1))
+
+    def predict_bucket(self, prompt_tokens) -> int:
+        x = jnp.asarray(featurize(np.asarray(prompt_tokens), self.cfg.n_features))[None]
+        return int(self._fn(x)[0])
+
+    def predict_tokens(self, prompt_tokens) -> int:
+        b = self.predict_bucket(prompt_tokens)
+        return b * self.cfg.bucket_size + self.cfg.bucket_size // 2

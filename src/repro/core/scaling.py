@@ -1,0 +1,207 @@
+"""Fast scaling (§6): the 5-step pipeline, pre-warmed pods/TEs, DRAM
+pre-loading, and NPU-fork.
+
+Timing models follow Table 2 / Figures 9-10: each step has a baseline
+latency and an optimized path. Pre-warm pools and the DRAM page cache are
+real state machines; NPU-fork moves real weight bytes through DistFlow's
+broadcast (ICI = HCCS analogue, DCN = RoCE analogue), so Figure 10/11's
+benchmarks measure the same code the autoscaler runs.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.engine.distflow import BACKENDS, BufferInfo, DistFlow
+
+
+@dataclass
+class ScaleTimings:
+    """Baseline step latencies (seconds) — Figure 9's 'before' bars."""
+    scaler_pre: float = 40.0            # pod creation / resource alloc
+    te_pre_load: float = 35.0           # python startup + NPU init + HCCL
+    te_pre_load_optimized: float = 22.0  # late-import + parallel init (-35%)
+    te_post_load_warmup: float = 12.0   # engine warm-up profiling
+    te_post_load_alloc: float = 3.0     # CPU/NPU block allocation
+    te_post_load_optimized: float = 0.8  # offline profile + async alloc + dummy req
+    scaler_post: float = 5.0            # global TE list propagation
+    scaler_post_optimized: float = 0.5  # proactive push
+    torch_init: float = 0.3             # tensor init overhead on load
+
+
+@dataclass
+class ModelAsset:
+    name: str
+    n_bytes: int                        # total weight bytes
+    tp: int = 1                         # partitions (each TE loads 1/tp)
+
+
+@dataclass
+class PreWarmedPod:
+    pod_id: str
+    busy: bool = False
+
+
+@dataclass
+class PreWarmedTE:
+    """Model- and parallelism-agnostic pre-warmed TE (§6.1): Python/NPU/HCCL
+    init already done; can be bound to any model + TP/PP/SP layout."""
+    te_id: str
+    bound_model: Optional[str] = None
+    busy: bool = False
+
+
+class DRAMPageCache:
+    """Host page cache of safetensors-format weights (§6.2). The cluster
+    manager pre-loads models predicted to scale."""
+
+    def __init__(self, capacity_bytes: float = 1.5e12):
+        self.capacity = capacity_bytes
+        self.resident: Dict[str, ModelAsset] = {}
+
+    def used(self) -> float:
+        return sum(a.n_bytes for a in self.resident.values())
+
+    def preload(self, asset: ModelAsset) -> bool:
+        if asset.name in self.resident:
+            return True
+        while self.used() + asset.n_bytes > self.capacity and self.resident:
+            # evict least-recently preloaded (FIFO is fine for the cache sim)
+            self.resident.pop(next(iter(self.resident)))
+        if asset.n_bytes > self.capacity:
+            return False
+        self.resident[asset.name] = asset
+        return True
+
+    def hit(self, model: str) -> bool:
+        return model in self.resident
+
+
+@dataclass
+class LoadResult:
+    path: str                           # "dram_hit" | "dram_miss" | "npu_fork_ici" | "npu_fork_dcn"
+    seconds: float
+    bytes_moved: int
+
+
+class ModelLoader:
+    """TE-Load step (§6.2): local loading via PCIe (DRAM hit/miss) or
+    NPU-fork over chip-to-chip links from a running TE."""
+
+    def __init__(self, dram: DRAMPageCache, timings: ScaleTimings = ScaleTimings()):
+        self.dram = dram
+        self.t = timings
+
+    def local_load(self, asset: ModelAsset, n_parallel_tes: int = 1) -> LoadResult:
+        per_te = asset.n_bytes / asset.tp
+        if self.dram.hit(asset.name):
+            bw = BACKENDS["pcie_dram"]["bw"] / max(1, n_parallel_tes)  # PCIe contention
+            return LoadResult("dram_hit", self.t.torch_init + per_te / bw, int(per_te))
+        bw = BACKENDS["ssd"]["bw"] / max(1, n_parallel_tes)
+        self.dram.preload(asset)
+        return LoadResult("dram_miss", self.t.torch_init + per_te / bw, int(per_te))
+
+    def npu_fork(self, asset: ModelAsset, source: DistFlow,
+                 targets: List[DistFlow], link: str = "ici",
+                 source_busy_frac: float = 0.0,
+                 payload=None) -> LoadResult:
+        """Broadcast weights from a running TE to `targets` (§6.2). Dedicated
+        transfer engines keep interference low: `source_busy_frac` models
+        prefill/decode contention on the source (Figure 11b/c)."""
+        per_te = asset.n_bytes / asset.tp
+        src = BufferInfo(owner=source.owner, tier="npu",
+                         payload=payload if payload is not None else b"\0")
+        dsts = [BufferInfo(owner=t.owner, tier="npu", deliver=lambda _p: None)
+                for t in targets]
+        xfers = source.broadcast(src, dsts, backend="ici" if link == "ici" else "dcn")
+        bw = BACKENDS["ici" if link == "ici" else "dcn"]["bw"]
+        fanout = 1.0 + 0.1 * max(0, math.ceil(math.log2(max(len(targets), 1))))
+        contention = 1.0 + 0.15 * source_busy_frac   # AICPU-offloaded: small
+        secs = (per_te / bw) * fanout * contention
+        return LoadResult(f"npu_fork_{link}", secs, int(per_te) * len(targets))
+
+    def theoretical(self, asset: ModelAsset) -> float:
+        return (asset.n_bytes / asset.tp) / BACKENDS["pcie_dram"]["bw"]
+
+
+@dataclass
+class ScaleEvent:
+    te_id: str
+    steps: Dict[str, float]
+    total: float
+    path: str
+
+
+class FastScaler:
+    """End-to-end scaling pipeline (Figure 8): Scaler-Pre → TE-Pre-Load →
+    TE-Load → TE-Post-Load → Scaler-Post, with every §6 optimization
+    toggleable so Figure 9's before/after is reproducible."""
+
+    def __init__(self, dram: DRAMPageCache, timings: ScaleTimings = ScaleTimings(),
+                 n_prewarm_pods: int = 4, n_prewarm_tes: int = 4):
+        self.t = timings
+        self.dram = dram
+        self.loader = ModelLoader(dram, timings)
+        self.pods = [PreWarmedPod(f"pod-{i}") for i in range(n_prewarm_pods)]
+        self.tes = [PreWarmedTE(f"pw-te-{i}") for i in range(n_prewarm_tes)]
+        self.events: List[ScaleEvent] = []
+
+    def _grab_pod(self) -> Optional[PreWarmedPod]:
+        for p in self.pods:
+            if not p.busy:
+                p.busy = True
+                return p
+        return None
+
+    def _grab_te(self, model: str) -> Optional[PreWarmedTE]:
+        # prefer a pre-warmed TE already bound to this model's DRAM preload
+        for te in self.tes:
+            if not te.busy and te.bound_model == model:
+                te.busy = True
+                return te
+        for te in self.tes:
+            if not te.busy:
+                te.busy = True
+                return te
+        return None
+
+    def scale_one(self, asset: ModelAsset, optimized: bool = True,
+                  source: Optional[DistFlow] = None,
+                  targets: Optional[List[DistFlow]] = None,
+                  link: str = "ici", n_parallel: int = 1) -> ScaleEvent:
+        steps: Dict[str, float] = {}
+        # 1. Scaler-Pre
+        pod = self._grab_pod() if optimized else None
+        steps["scaler_pre"] = 0.2 if pod is not None else self.t.scaler_pre
+        # 2. TE-Pre-Load
+        te = self._grab_te(asset.name) if optimized else None
+        if te is not None:
+            steps["te_pre_load"] = 0.5                    # pool hit
+        else:
+            steps["te_pre_load"] = (self.t.te_pre_load_optimized if optimized
+                                    else self.t.te_pre_load)
+        # 3. TE-Load
+        if source is not None and targets:
+            lr = self.loader.npu_fork(asset, source, targets, link=link)
+        else:
+            lr = self.loader.local_load(asset, n_parallel_tes=n_parallel)
+        steps["te_load"] = lr.seconds
+        # 4. TE-Post-Load
+        steps["te_post_load"] = (self.t.te_post_load_optimized if optimized else
+                                 self.t.te_post_load_warmup + self.t.te_post_load_alloc)
+        # 5. Scaler-Post
+        steps["scaler_post"] = (self.t.scaler_post_optimized if optimized
+                                else self.t.scaler_post)
+        ev = ScaleEvent(te_id=te.te_id if te else f"cold-te-{len(self.events)}",
+                        steps=steps, total=sum(steps.values()), path=lr.path)
+        self.events.append(ev)
+        return ev
+
+    def release(self, te_id: str) -> None:
+        for te in self.tes:
+            if te.te_id == te_id:
+                te.busy = False
+        for p in self.pods:
+            p.busy = False

@@ -1,0 +1,157 @@
+"""Distributed scheduling policies (§5, Algorithm 1).
+
+``dist_sched(req, tes)`` = PD_aware → (locality_aware | load_aware):
+  1. PD-aware: pick the TE *type* (disaggregated pair vs colocated) from
+     the combined heatmap + the decode-length predictor (§5.3);
+  2. if the surviving group is load-balanced, prefer the TE with the
+     longest prefix match in the global prompt tree (§5.2);
+  3. otherwise pick the least-loaded TE.
+
+TEs are described by ``TEHandle``s — the JE-side view (type, load, local
+prompt-tree index shared with the global tree).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.heatmap import lookup
+from repro.core.predictor import DecodeLengthPredictor
+from repro.engine.radix_tree import RadixTree
+
+
+@dataclass
+class TEHandle:
+    te_id: str
+    te_type: str                        # "colocated" | "pd_pair"
+    load: float = 0.0                   # outstanding work (tokens)
+    n_running: int = 0
+    engine: object = None               # live FlowServe (or sim TE)
+    prompt_tree: RadixTree = field(default_factory=RadixTree)
+
+    def record_prompt(self, tokens) -> None:
+        self.prompt_tree.insert(tuple(tokens), self.te_id)
+
+
+@dataclass
+class SchedRequest:
+    tokens: Sequence[int]
+    predicted_decode: int = 128
+
+
+class GlobalPromptTree:
+    """JE-side: one tree per TE group; payloads are TE ids (§5.2)."""
+
+    def __init__(self):
+        self.tree = RadixTree()
+
+    def record(self, tokens, te_id: str) -> None:
+        self.tree.insert(tuple(tokens), te_id)
+
+    def best_te(self, tokens, candidates: List[TEHandle]) -> Tuple[Optional[str], int]:
+        """TE holding the longest matching prefix among candidates."""
+        cand_ids = {t.te_id for t in candidates}
+        best_id, best_len = None, 0
+        matched, path = self.tree.match_prefix(tuple(tokens))
+        # walk the matched path from deepest to shallowest; payload = te_id
+        run = 0
+        consumed = 0
+        for node in path:
+            consumed += len(node.key)
+            payload = node.payload or self.tree.any_payload(node)
+            if payload in cand_ids and min(consumed, matched) > best_len:
+                best_id, best_len = payload, min(consumed, matched)
+        return best_id, best_len
+
+
+@dataclass
+class DistSchedConfig:
+    load_balance_threshold: float = 0.30   # max relative load spread
+    min_prefix_tokens: int = 8             # ignore tiny prefix matches
+
+
+class DistributedScheduler:
+    """Runs inside a model-serving JE (one instance per TE group)."""
+
+    def __init__(self, tes: List[TEHandle], combined_heatmap: np.ndarray,
+                 prefill_lens, decode_ratios,
+                 predictor: Optional[DecodeLengthPredictor] = None,
+                 cfg: DistSchedConfig = DistSchedConfig()):
+        self.tes = {t.te_id: t for t in tes}
+        self.heatmap = combined_heatmap
+        self.prefill_lens = prefill_lens
+        self.decode_ratios = decode_ratios
+        self.predictor = predictor
+        self.cfg = cfg
+        self.global_tree = GlobalPromptTree()
+        self.decisions = {"pd_disagg": 0, "pd_colo": 0, "locality": 0, "load": 0}
+
+    # ------------------------------------------------------ Algorithm 1
+    def dist_sched(self, req: SchedRequest) -> TEHandle:
+        tes = list(self.tes.values())
+        tes = self.pd_aware(req, tes)
+        if self._is_load_balanced(tes):
+            chosen = self.locality_aware(req, tes)
+        else:
+            chosen = self.load_aware(req, tes)
+        return chosen
+
+    def pd_aware(self, req: SchedRequest, tes: List[TEHandle]) -> List[TEHandle]:
+        p_len = len(req.tokens)
+        d_len = req.predicted_decode
+        if self.predictor is not None:
+            d_len = self.predictor.predict_tokens(req.tokens)
+        val = lookup(self.heatmap, self.prefill_lens, self.decode_ratios,
+                     p_len, d_len)
+        want = "pd_pair" if val > 0 else "colocated"
+        sub = [t for t in tes if t.te_type == want]
+        if not sub:                      # group has only one type
+            return tes
+        self.decisions["pd_disagg" if want == "pd_pair" else "pd_colo"] += 1
+        return sub
+
+    def locality_aware(self, req: SchedRequest, tes: List[TEHandle]) -> TEHandle:
+        te_id, n = self.global_tree.best_te(req.tokens, tes)
+        if te_id is not None and n >= self.cfg.min_prefix_tokens:
+            self.decisions["locality"] += 1
+            return self.tes[te_id]
+        return self.load_aware(req, tes, count=False)
+
+    def load_aware(self, req: SchedRequest, tes: List[TEHandle],
+                   count: bool = True) -> TEHandle:
+        if count:
+            self.decisions["load"] += 1
+        return min(tes, key=lambda t: t.load)
+
+    # ------------------------------------------------------ bookkeeping
+    def _is_load_balanced(self, tes: List[TEHandle]) -> bool:
+        loads = [t.load for t in tes]
+        if not loads or max(loads) <= 0:
+            return True
+        spread = (max(loads) - min(loads)) / max(max(loads), 1e-9)
+        return spread <= self.cfg.load_balance_threshold
+
+    def commit(self, req: SchedRequest, te: TEHandle) -> None:
+        """Record placement: load + prompt-tree bookkeeping."""
+        te.load += len(req.tokens) + req.predicted_decode
+        te.n_running += 1
+        self.global_tree.record(req.tokens, te.te_id)
+        te.record_prompt(req.tokens)
+
+    def complete(self, req: SchedRequest, te: TEHandle) -> None:
+        te.load = max(0.0, te.load - (len(req.tokens) + req.predicted_decode))
+        te.n_running = max(0, te.n_running - 1)
+
+
+def round_robin_scheduler(tes: List[TEHandle]):
+    """Baseline RR policy used in Figure 7's comparison."""
+    state = {"i": 0}
+
+    def pick(req: SchedRequest) -> TEHandle:
+        te = tes[state["i"] % len(tes)]
+        state["i"] += 1
+        return te
+
+    return pick

@@ -1,0 +1,1 @@
+from repro.data.pipeline import DataConfig, PackedDataset, synthetic_corpus  # noqa: F401

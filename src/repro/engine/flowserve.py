@@ -1,0 +1,361 @@
+"""FLOWSERVE — the serving engine (§4). One engine == one model-serving TE.
+
+Master–executor architecture: the master (this class) runs the scheduler,
+RTC index, and DistFlow decisions; the executor side is the model runner
+(+ page pools), which on real hardware is the SPMD program spanning the
+TE's NPUs. Modes mirror §4.5: "colocated" (chunked-prefill + decode in one
+engine), "prefill" (P-only TE) and "decode" (D-only TE) for
+PD-disaggregated groups.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.engine.distflow import BufferInfo, DistFlow
+from repro.engine.kv_cache import OutOfPagesError, PagedKVPool, pages_needed
+from repro.engine.model_runner import (PagedRunner, SequenceState, SlotRunner,
+                                       pick_runner)
+from repro.engine.rtc import RelationalTensorCache, RTCCostModel
+from repro.engine.sampling import SamplingParams, sample
+from repro.engine.scheduler import Scheduler, SchedulerConfig
+from repro.engine.tokenizer import EOS_ID, ByteTokenizer
+from repro.models.model_factory import ModelBundle
+
+_req_ids = itertools.count()
+
+
+@dataclass
+class Request:
+    prompt_tokens: List[int]
+    sampling: SamplingParams = field(default_factory=SamplingParams)
+    req_id: str = ""
+    ctx_id: Optional[str] = None        # explicit context-caching id
+    arrival: float = field(default_factory=time.monotonic)
+    extra: Dict[str, Any] = field(default_factory=dict)  # modality stubs
+
+    def __post_init__(self):
+        if not self.req_id:
+            self.req_id = f"req-{next(_req_ids)}"
+
+
+@dataclass
+class Completion:
+    req_id: str
+    tokens: List[int]
+    ttft: float
+    finish: float
+    arrival: float
+    n_prompt: int
+
+    @property
+    def tpot(self) -> float:
+        n = max(len(self.tokens) - 1, 1)
+        return (self.finish - self.arrival - self.ttft) / n
+
+    @property
+    def jct(self) -> float:
+        return self.finish - self.arrival
+
+
+@dataclass
+class EngineConfig:
+    mode: str = "colocated"             # colocated | prefill | decode
+    n_pages: int = 256
+    page_size: int = 16
+    n_slots: int = 8                    # SlotRunner slots
+    max_len: int = 256                  # SlotRunner per-slot capacity
+    max_batch_tokens: int = 64
+    max_decode_batch: int = 8
+    chunk_size: int = 16
+    enable_prefix_cache: bool = True
+    async_sched: bool = True
+    dtype: Any = jnp.float32
+    seed: int = 0
+
+
+class FlowServe:
+    def __init__(self, bundle: ModelBundle, params, ecfg: EngineConfig,
+                 name: str = "te-0"):
+        self.bundle = bundle
+        self.cfg: ModelConfig = bundle.cfg
+        self.ecfg = ecfg
+        self.name = name
+        self.runner_kind = pick_runner(self.cfg)
+        self.tokenizer = ByteTokenizer(max(self.cfg.vocab_size, 259))
+        self.distflow = DistFlow(owner=name)
+        self._key = jax.random.PRNGKey(ecfg.seed)
+
+        if self.runner_kind == "paged":
+            self.pool = PagedKVPool(self.cfg, ecfg.n_pages, ecfg.page_size,
+                                    ecfg.dtype)
+            cm = RTCCostModel(flops_per_token=2.0 * self.cfg.active_param_count())
+            self.rtc = RelationalTensorCache(self.pool, cm) \
+                if ecfg.enable_prefix_cache else None
+            self.runner = PagedRunner(bundle, params, self.pool, ecfg.dtype)
+        else:
+            self.pool = None
+            self.rtc = RelationalTensorCache.__new__(RelationalTensorCache)  # placeholder
+            self.rtc = None
+            self.runner = SlotRunner(bundle, params, ecfg.n_slots, ecfg.max_len,
+                                     ecfg.dtype)
+            self._state_cache: Dict[tuple, Any] = {} if ecfg.enable_prefix_cache else None
+
+        scfg = SchedulerConfig(max_batch_tokens=ecfg.max_batch_tokens,
+                               max_decode_batch=ecfg.max_decode_batch,
+                               chunk_size=ecfg.chunk_size, mode=ecfg.mode)
+        self.scheduler = Scheduler(scfg, self.rtc, self.runner_kind == "paged")
+        self._seqs: Dict[str, SequenceState] = {}
+        self._requests: Dict[str, Request] = {}
+        self._ttft: Dict[str, float] = {}
+        self._next_plan = None
+        self._prefill_done_buffer: List[str] = []  # P-mode: ready to migrate
+        self.steps = 0
+        self.step_wall = 0.0
+        self.sample_params: Dict[str, SamplingParams] = {}
+
+    # ---------------------------------------------------------------- API
+    def add_request(self, req: Request) -> str:
+        seq = SequenceState(seq_id=req.req_id, tokens=list(req.prompt_tokens),
+                            n_prompt=len(req.prompt_tokens), extra=dict(req.extra))
+        if not seq.extra:
+            seq.extra = {k: np.asarray(v) for k, v in
+                         self.bundle.extra_inputs(1, self.ecfg.dtype).items()}
+        self._seqs[req.req_id] = seq
+        self._requests[req.req_id] = req
+        self.sample_params[req.req_id] = req.sampling
+        if self.runner_kind == "slot" and self._state_cache is not None:
+            self._try_state_reuse(seq)
+        self.scheduler.admit(seq)
+        return req.req_id
+
+    def has_work(self) -> bool:
+        return self.scheduler.has_work()
+
+    def step(self) -> List[Completion]:
+        """One engine iteration: (maybe prepared) plan → execute → sample →
+        commit → prepare next plan (async mode prepares before sampling)."""
+        t0 = time.monotonic()
+        self.scheduler.resolve_prefix()
+        self.scheduler.pump_prefetch()
+        plan = self._next_plan if (self.ecfg.async_sched and self._next_plan) \
+            else self.scheduler.prepare_next()
+        self._next_plan = None
+        completions: List[Completion] = []
+
+        # ---------------- prefill chunks
+        for seq, start, chunk in plan.prefill:
+            if seq.n_cached != start or seq.seq_id not in self._seqs:
+                continue  # stale plan entry (seq preempted/finished)
+            if self.runner_kind == "paged":
+                if chunk:
+                    self._ensure_pages(seq, seq.n_cached + len(chunk))
+                    self.runner.prefill_chunk(seq, chunk)
+            else:
+                if seq.slot is None:
+                    if not self.runner.alloc_slot(seq):
+                        self.scheduler.ready.appendleft(seq)  # no slot; retry
+                        if seq in self.scheduler.prefilling:
+                            self.scheduler.prefilling.remove(seq)
+                        continue
+                    snap_key = seq.extra.pop("_state_restore", None)
+                    if snap_key is not None:
+                        self.runner.restore_state(seq, self._state_cache[snap_key])
+                if chunk:
+                    self.runner.prefill_chunk(seq, chunk)
+            done = seq.n_cached >= len(seq.tokens) - 1
+            if done:
+                self._on_prefill_done(seq)
+                self.scheduler.on_prefill_progress(seq, True)
+            else:
+                self.scheduler.on_prefill_progress(seq, False)
+
+        # ---------------- decode batch
+        if plan.decode:
+            # drop seqs that finished or were preempted (requeued) after the
+            # plan was (asynchronously) prepared
+            live = [s for s in plan.decode if s.seq_id in self._seqs
+                    and s in self.scheduler.running]
+            if live and self.runner_kind == "paged":
+                for s in live:
+                    if s in self.scheduler.running:  # not yet preempted
+                        self._ensure_pages(s, len(s.tokens))
+                # page pressure may have preempted batch members: they must
+                # NOT decode this step (their freed pages may already belong
+                # to another sequence — writing would corrupt it)
+                live = [s for s in live if s in self.scheduler.running]
+            if live:
+                logits = self.runner.decode(live)
+                # async scheduling: the next plan depends only on counts —
+                # prepare it *before* sampling commits token values (§4.2)
+                if self.ecfg.async_sched:
+                    self._next_plan = self.scheduler.prepare_next()
+                completions.extend(self._commit_tokens(live, logits))
+
+        if self.ecfg.async_sched and self._next_plan is None:
+            self._next_plan = self.scheduler.prepare_next()
+        self.steps += 1
+        self.step_wall += time.monotonic() - t0
+        return completions
+
+    def run_to_completion(self, max_steps: int = 10000) -> List[Completion]:
+        out = []
+        for _ in range(max_steps):
+            if not self.has_work():
+                break
+            out.extend(self.step())
+        return out
+
+    # ---------------------------------------------------------------- PD
+    def pop_migratable(self) -> List[str]:
+        """P-mode: request ids whose prefill finished and KV is exportable."""
+        out = self._prefill_done_buffer
+        self._prefill_done_buffer = []
+        return out
+
+    def export_kv(self, req_id: str):
+        """P-mode: KV of the first n_prompt-1 tokens; the decode TE runs the
+        last prompt token as its first decode step (by-req transfer, §4.5)."""
+        seq = self._seqs[req_id]
+        payload = self.runner.export_kv(seq)
+        payload["req_id"] = req_id
+        payload["sampling"] = self.sample_params[req_id]
+        payload["arrival"] = self._requests[req_id].arrival
+        return payload
+
+    def release_request(self, req_id: str, keep_prefix: bool = True) -> None:
+        seq = self._seqs.pop(req_id, None)
+        if seq is None:
+            return
+        if self.runner_kind == "paged" and seq.pages:
+            own = seq.pages[seq.reused_pages:]
+            shared = seq.pages[:seq.reused_pages]
+            preserve = self.rtc is not None and keep_prefix and seq.n_cached > 0
+            if preserve:
+                self.rtc.preserve_prefix(tuple(seq.tokens[:seq.n_cached]),
+                                         seq.pages,
+                                         ctx_id=self._requests[req_id].ctx_id)
+            self.pool.release(own, keep_cached=preserve)
+            if shared:
+                self.pool.release(shared, keep_cached=True)
+        elif self.runner_kind == "slot":
+            if self._state_cache is not None and seq.slot is not None:
+                key = tuple(seq.tokens[:seq.n_cached])
+                if key and len(self._state_cache) < 32:
+                    self._state_cache[key] = self.runner.snapshot_state(seq)
+            self.runner.free_slot(seq)
+        self._requests.pop(req_id, None)
+
+    def import_request(self, payload) -> str:
+        """D-mode: accept a migrated (prefilled) request from a prefill TE.
+        The next decode step processes the final prompt token."""
+        req = Request(prompt_tokens=payload["tokens"][:payload["n_prompt"]],
+                      sampling=payload["sampling"], req_id=payload["req_id"])
+        req.arrival = payload["arrival"]
+        seq = SequenceState(seq_id=req.req_id,
+                            tokens=list(payload["tokens"]),
+                            n_prompt=payload["n_prompt"],
+                            n_cached=payload["n_cached"])
+        self._seqs[req.req_id] = seq
+        self._requests[req.req_id] = req
+        self.sample_params[req.req_id] = req.sampling
+        if self.runner_kind == "paged":
+            n_pages = payload["k"].shape[1]
+            seq.pages = self.pool.alloc(n_pages)
+            self.runner.import_kv(payload, seq.pages)
+        else:
+            self.runner.alloc_slot(seq)
+            self.runner.import_kv(payload, seq)
+        self.scheduler.running.append(seq)
+        return req.req_id
+
+    # ---------------------------------------------------------------- internals
+    def _ensure_pages(self, seq: SequenceState, n_tokens: int) -> None:
+        need = pages_needed(n_tokens, self.pool.page_size) - len(seq.pages)
+        for _ in range(max(0, need)):
+            while True:
+                try:
+                    page = (self.rtc.append_block() if self.rtc
+                            else self.pool.alloc(1)[0])
+                    break
+                except OutOfPagesError:
+                    victim = self._pick_victim(exclude=seq)
+                    if victim is None:
+                        raise
+                    self._preempt(victim)
+            seq.pages.append(page)
+
+    def _pick_victim(self, exclude: SequenceState) -> Optional[SequenceState]:
+        """Most recently admitted page-holding seq (decoding, then
+        mid-prefill), excluding the requester."""
+        for pool in (self.scheduler.running, self.scheduler.prefilling):
+            for cand in reversed(pool):
+                if cand is not exclude and cand.pages:
+                    return cand
+        return None
+
+    def _preempt(self, seq: SequenceState) -> None:
+        own = seq.pages[seq.reused_pages:]
+        shared = seq.pages[:seq.reused_pages]
+        self.pool.release(own)
+        if shared:
+            self.pool.release(shared, keep_cached=True)
+        seq.reused_pages = 0
+        self.scheduler.requeue(seq)
+
+    def _on_prefill_done(self, seq: SequenceState) -> None:
+        """Prefill covered tokens [0, n_prompt-1); the final prompt token is
+        processed by the decode path (its KV write + first-token logits),
+        either locally (colocated) or on the decode TE (PD-disaggregated)."""
+        if self.ecfg.mode == "prefill":
+            self._prefill_done_buffer.append(seq.seq_id)
+            self._ttft[seq.seq_id] = time.monotonic() - self._requests[seq.seq_id].arrival
+
+    def _commit_tokens(self, seqs: List[SequenceState], logits,
+                       first: bool = False) -> List[Completion]:
+        self._key, sub = jax.random.split(self._key)
+        completions = []
+        toks = None
+        for i, seq in enumerate(seqs):
+            sp = self.sample_params[seq.seq_id]
+            tok = int(sample(logits[i:i + 1], sp, jax.random.fold_in(sub, i),
+                             self.cfg.vocab_size)[0])
+            seq.tokens.append(tok)
+            if seq.seq_id not in self._ttft or self._ttft[seq.seq_id] == 0.0:
+                self._ttft[seq.seq_id] = time.monotonic() - self._requests[seq.seq_id].arrival
+            n_new = len(seq.tokens) - seq.n_prompt
+            if (sp.stop_on_eos and tok == EOS_ID) or n_new >= sp.max_new_tokens:
+                req = self._requests[seq.seq_id]
+                completions.append(Completion(
+                    req_id=seq.seq_id, tokens=seq.tokens[seq.n_prompt:],
+                    ttft=self._ttft[seq.seq_id], finish=time.monotonic(),
+                    arrival=req.arrival, n_prompt=seq.n_prompt))
+                self.scheduler.on_finished(seq)
+                self.release_request(seq.seq_id)
+        return completions
+
+    def _try_state_reuse(self, seq: SequenceState) -> None:
+        """SSM prefix cache: longest state checkpoint whose token prefix
+        matches the prompt (exact-boundary reuse, DESIGN.md §4). n_cached is
+        committed now (the scheduler plans chunks from it); the snapshot is
+        restored once a slot is assigned."""
+        best_key, best_len = None, 0
+        prompt = tuple(seq.tokens[:seq.n_prompt])
+        for key in self._state_cache or {}:
+            n = len(key)
+            if n > best_len and n < len(prompt) and prompt[:n] == key:
+                best_key, best_len = key, n
+        if best_key is not None:
+            seq.extra["_state_restore"] = best_key
+            seq.n_cached = best_len
+
+    # stats -------------------------------------------------------------
+    def prefix_cache_stats(self) -> Dict[str, int]:
+        return dict(self.rtc.stats) if self.rtc else {}

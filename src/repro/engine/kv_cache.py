@@ -1,0 +1,145 @@
+"""Paged KV cache with tiered storage (RTC's data plane).
+
+The NPU tier is a global page pool: k/v arrays of shape
+(L, n_pages, page_size, Hkv, hd) — stacked over attention layers so the
+jit'd decode step takes the whole pool as one donated operand. The DRAM
+tier is a host-side dict of swapped-out page runs (numpy). Block tables
+map sequences → page runs, exactly the vLLM/RTC block table. On real
+hardware the pool is sharded over the `model` mesh axis and tier moves are
+DistFlow DMAs; here they are device↔host copies.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+class OutOfPagesError(RuntimeError):
+    pass
+
+
+@dataclass
+class PageRef:
+    """ref_count>0 pages are pinned (shared via prefix cache); cached pages
+    are retained for reuse after release and reclaimed under pressure."""
+    page_id: int
+    ref_count: int = 0
+    cached: bool = False
+
+
+class PagedKVPool:
+    """Global NPU-tier KV pool for the attention layers of one engine."""
+
+    def __init__(self, cfg: ModelConfig, n_pages: int, page_size: int,
+                 dtype=jnp.float32):
+        from repro.models.serving import attn_layer_count
+        self.cfg = cfg
+        self.n_layers = attn_layer_count(cfg)
+        self.page_size = page_size
+        self.n_pages = n_pages
+        shape = (max(self.n_layers, 1), n_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+        self.k = jnp.zeros(shape, dtype)
+        self.v = jnp.zeros(shape, dtype)
+        self._free: List[int] = list(range(n_pages))
+        self._refs: Dict[int, PageRef] = {}
+        # DRAM tier: handle -> (k_np, v_np) of shape (L, NP_run, P, Hkv, hd)
+        self.dram: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        self._dram_next = 0
+
+    # ------------------------------------------------------------- alloc
+    def free_page_count(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        if len(self._free) < n:
+            raise OutOfPagesError(f"need {n} pages, have {len(self._free)}")
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._refs[p] = PageRef(p, ref_count=1)
+        return pages
+
+    def retain(self, pages: List[int]) -> None:
+        for p in pages:
+            self._refs[p].ref_count += 1
+
+    def release(self, pages: List[int], keep_cached: bool = False) -> List[int]:
+        """Drop a reference; zero-ref pages are kept cached (evictable) or
+        returned to the free list. Returns freed page ids."""
+        freed = []
+        for p in pages:
+            ref = self._refs[p]
+            ref.ref_count -= 1
+            if ref.ref_count <= 0:
+                if keep_cached:
+                    ref.cached = True
+                    ref.ref_count = 0
+                else:
+                    del self._refs[p]
+                    self._free.append(p)
+                    freed.append(p)
+        return freed
+
+    def evict_cached(self, pages: List[int]) -> None:
+        for p in pages:
+            ref = self._refs.get(p)
+            if ref is not None and ref.cached and ref.ref_count == 0:
+                del self._refs[p]
+                self._free.append(p)
+
+    def reclaimable(self) -> List[int]:
+        return [p for p, r in self._refs.items() if r.cached and r.ref_count == 0]
+
+    # ------------------------------------------------------------- data
+    def write_run(self, pages: List[int], offset: int,
+                  k_new: jax.Array, v_new: jax.Array) -> None:
+        """Write a token run into (pages, offset). k_new/v_new:
+        (L, T, Hkv, hd) — all layers at once."""
+        t = k_new.shape[1]
+        ps = self.page_size
+        flat = offset + np.arange(t)
+        page_idx = jnp.asarray([pages[i // ps] for i in flat], jnp.int32)
+        slot_idx = jnp.asarray(flat % ps, jnp.int32)
+        self.k = self.k.at[:, page_idx, slot_idx].set(k_new)
+        self.v = self.v.at[:, page_idx, slot_idx].set(v_new)
+
+    def gather(self, pages: List[int]) -> Tuple[jax.Array, jax.Array]:
+        idx = jnp.asarray(pages, jnp.int32)
+        return self.k[:, idx], self.v[:, idx]       # (L, NP_run, P, Hkv, hd)
+
+    # ------------------------------------------------------------- tiers
+    def copy_to_dram(self, pages: List[int]) -> int:
+        """RTC `Copy`: NPU → DRAM. Returns a DRAM handle."""
+        idx = jnp.asarray(pages, jnp.int32)
+        k_np = np.asarray(self.k[:, idx])
+        v_np = np.asarray(self.v[:, idx])
+        handle = self._dram_next
+        self._dram_next += 1
+        self.dram[handle] = (k_np, v_np)
+        return handle
+
+    def populate_from_dram(self, handle: int, pages: List[int]) -> None:
+        """RTC `Populate` data plane: DRAM → NPU into allocated pages."""
+        k_np, v_np = self.dram[handle]
+        idx = jnp.asarray(pages, jnp.int32)
+        self.k = self.k.at[:, idx].set(jnp.asarray(k_np[:, :len(pages)]))
+        self.v = self.v.at[:, idx].set(jnp.asarray(v_np[:, :len(pages)]))
+
+    def dram_bytes(self, handle: int) -> int:
+        k_np, v_np = self.dram[handle]
+        return k_np.nbytes + v_np.nbytes
+
+    def drop_dram(self, handle: int) -> None:
+        self.dram.pop(handle, None)
+
+    def pool_bytes(self) -> int:
+        return int(np.prod(self.k.shape)) * self.k.dtype.itemsize * 2
+
+
+def pages_needed(n_tokens: int, page_size: int) -> int:
+    return (n_tokens + page_size - 1) // page_size

@@ -1,0 +1,325 @@
+"""FLOWSERVE model-generator backends (the per-NPU executor side).
+
+Two runners cover the model zoo:
+
+  * ``PagedRunner`` — attention-only towers (dense / MoE / SWA /
+    local-global / qk-norm): true paged-KV continuous batching. Decode is
+    one jit'd step over the whole page pool (donated); prefill runs in
+    chunks that scatter fresh KV into pages (chunked prefill, §4.2).
+    On TPU the attention inside these steps dispatches to the Pallas
+    paged_attention / flash_prefill kernels via repro.kernels.ops.
+
+  * ``SlotRunner`` — recurrent / hybrid / cross-attention families (rwkv6,
+    recurrentgemma, seamless enc-dec, llama-vision): fixed batch slots with
+    dense per-slot caches (their state is O(1) or includes modality
+    memories). Continuous batching assigns sequences to free slots; prefix
+    reuse is state-checkpoint based (DESIGN.md §4).
+
+Both expose: prefill_chunk(seq, tokens) -> Optional[logits_row],
+decode(seqs) -> logits (B, Vp), plus export/import hooks for PD
+disaggregation (DistFlow payloads).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.engine.kv_cache import PagedKVPool, pages_needed
+from repro.kernels import ref as KREF
+from repro.models import layers as L
+from repro.models import serving as S
+from repro.models import transformer as T
+from repro.models.model_factory import ModelBundle
+
+
+def pick_runner(cfg: ModelConfig) -> str:
+    if cfg.attn_kind in ("global", "swa", "local_global") and cfg.vision is None \
+            and cfg.encoder is None:
+        return "paged"
+    return "slot"
+
+
+@dataclass
+class SequenceState:
+    seq_id: str
+    tokens: List[int]                   # full token ids (prompt + generated)
+    n_prompt: int
+    n_cached: int = 0                   # tokens with KV/state materialized
+    pages: List[int] = field(default_factory=list)
+    reused_pages: int = 0               # prefix-cache pages (shared, pinned)
+    slot: Optional[int] = None          # SlotRunner slot id
+    state: Any = None                   # SlotRunner per-seq state snapshot
+    extra: Dict[str, Any] = field(default_factory=dict)  # modality stubs
+
+
+# ===========================================================================
+# Paged runner
+# ===========================================================================
+
+
+class PagedRunner:
+    def __init__(self, bundle: ModelBundle, params, pool: PagedKVPool,
+                 dtype=jnp.float32):
+        self.bundle = bundle
+        self.cfg = bundle.cfg
+        self.params = params
+        self.pool = pool
+        self.dtype = dtype
+        self._wins = [int(w) for w in np.asarray(T.window_schedule(self.cfg))]
+        self._decode_fns: Dict[int, Any] = {}
+        self._prefill_fns: Dict[Tuple[int, int], Any] = {}
+
+    # ------------------------------------------------------------ decode
+    def decode(self, seqs: List[SequenceState]) -> jax.Array:
+        """One decode step for a batch of sequences. The new token of each
+        seq is seqs[i].tokens[-1]; KV is written at position len(tokens)-1.
+        Caller must have appended a page if needed."""
+        b = len(seqs)
+        maxp = max(len(s.pages) for s in seqs)
+        bt = np.zeros((b, maxp), np.int32)
+        for i, s in enumerate(seqs):
+            bt[i, :len(s.pages)] = s.pages
+        tokens = jnp.asarray([s.tokens[-1] for s in seqs], jnp.int32)
+        lengths = jnp.asarray([len(s.tokens) for s in seqs], jnp.int32)
+        fn = self._decode_fn(maxp)
+        logits, self.pool.k, self.pool.v = fn(
+            self.params, tokens, jnp.asarray(bt), lengths, self.pool.k, self.pool.v)
+        for s in seqs:
+            s.n_cached = len(s.tokens)
+        return logits
+
+    def _decode_fn(self, maxp: int):
+        if maxp in self._decode_fns:
+            return self._decode_fns[maxp]
+        cfg = self.cfg
+        wins = self._wins
+        ps = self.pool.page_size
+
+        @functools.partial(jax.jit, donate_argnums=(4, 5))
+        def step(params, tokens, bt, lengths, k_pool, v_pool):
+            b = tokens.shape[0]
+            x = T.embed(cfg, params, tokens[:, None])
+            pos = (lengths - 1)[:, None]
+            bidx = jnp.arange(b)
+            page = bt[bidx, (lengths - 1) // ps]
+            slot = (lengths - 1) % ps
+            for li in range(cfg.n_layers):
+                p = jax.tree.map(lambda a: a[li], params["blocks"])
+                h = L.apply_norm(x, p["ln1"], cfg.norm)
+                q, k_new, v_new = L.attn_qkv(p["attn"], h, cfg.n_heads,
+                                             cfg.n_kv_heads, cfg.head_dim,
+                                             pos, cfg.rope_theta, cfg.qk_norm)
+                k_pool = k_pool.at[li, page, slot].set(k_new[:, 0])
+                v_pool = v_pool.at[li, page, slot].set(v_new[:, 0])
+                win = wins[li] if wins[li] < T.GLOBAL_WINDOW else None
+                o = KREF.paged_attention_ref(q[:, 0], k_pool[li], v_pool[li],
+                                             bt, lengths,
+                                             softcap=cfg.attn_logit_softcap,
+                                             window=win)
+                x = x + S._post_attn(cfg, p, L.attn_out(p["attn"], o[:, None]))
+                h = L.apply_norm(x, p["ln2"], cfg.norm)
+                if "moe" in p:
+                    from repro.models import moe as M
+                    m = M.moe_apply(p["moe"], h, cfg.moe, cfg.mlp_act, groups=1)
+                else:
+                    m = L.mlp_apply(p["mlp"], h, cfg.mlp_act)
+                if cfg.post_norms:
+                    m = L.apply_norm(m, p["ln2_post"], cfg.norm)
+                x = x + m
+            logits = T.unembed(cfg, params, x)[:, 0]
+            return logits, k_pool, v_pool
+
+        self._decode_fns[maxp] = step
+        return step
+
+    # ------------------------------------------------------------ prefill
+    def prefill_chunk(self, seq: SequenceState, chunk_tokens: List[int]
+                      ) -> Optional[jax.Array]:
+        """Run one prompt chunk; returns last-token logits when this chunk
+        completes the prompt (so the engine can sample the first token)."""
+        c = len(chunk_tokens)
+        start = seq.n_cached
+        npages = len(seq.pages)
+        fn = self._prefill_fn(c, npages)
+        tokens = jnp.asarray(chunk_tokens, jnp.int32)[None]
+        bt = jnp.asarray(seq.pages, jnp.int32)[None]
+        logits, self.pool.k, self.pool.v = fn(
+            self.params, tokens, jnp.asarray([start], jnp.int32), bt,
+            self.pool.k, self.pool.v)
+        seq.n_cached = start + c
+        if seq.n_cached >= seq.n_prompt:
+            return logits[0]
+        return None
+
+    def _prefill_fn(self, c: int, npages: int):
+        key = (c, npages)
+        if key in self._prefill_fns:
+            return self._prefill_fns[key]
+        cfg = self.cfg
+        wins = self._wins
+        ps = self.pool.page_size
+
+        @functools.partial(jax.jit, donate_argnums=(4, 5))
+        def run(params, tokens, start, bt, k_pool, v_pool):
+            x = T.embed(cfg, params, tokens)                    # (1,C,D)
+            positions = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None]
+            flat = start[0] + jnp.arange(c)
+            page = bt[0, flat // ps]
+            slot = flat % ps
+            total = npages * ps
+            kpos_base = jnp.arange(total, dtype=jnp.int32)[None]
+            for li in range(cfg.n_layers):
+                p = jax.tree.map(lambda a: a[li], params["blocks"])
+                h = L.apply_norm(x, p["ln1"], cfg.norm)
+                q, k_new, v_new = L.attn_qkv(p["attn"], h, cfg.n_heads,
+                                             cfg.n_kv_heads, cfg.head_dim,
+                                             positions, cfg.rope_theta, cfg.qk_norm)
+                k_pool = k_pool.at[li, page, slot].set(k_new[0])
+                v_pool = v_pool.at[li, page, slot].set(v_new[0])
+                k_seq = k_pool[li, bt[0]].reshape(1, total, cfg.n_kv_heads, cfg.head_dim)
+                v_seq = v_pool[li, bt[0]].reshape(1, total, cfg.n_kv_heads, cfg.head_dim)
+                kpos = jnp.where(kpos_base < (start[0] + c), kpos_base,
+                                 T.GLOBAL_WINDOW + 1)
+                mask = L.causal_mask(positions, kpos)
+                mask &= kpos[:, None, :] > (positions[:, :, None] - wins[li])
+                o = L.attention(q, k_seq, v_seq, mask, cfg.attn_logit_softcap)
+                x = x + S._post_attn(cfg, p, L.attn_out(p["attn"], o))
+                h = L.apply_norm(x, p["ln2"], cfg.norm)
+                if "moe" in p:
+                    from repro.models import moe as M
+                    m = M.moe_apply(p["moe"], h, cfg.moe, cfg.mlp_act, groups=1)
+                else:
+                    m = L.mlp_apply(p["mlp"], h, cfg.mlp_act)
+                if cfg.post_norms:
+                    m = L.apply_norm(m, p["ln2_post"], cfg.norm)
+                x = x + m
+            logits = T.unembed(cfg, params, x[:, -1:])[:, 0]
+            return logits, k_pool, v_pool
+
+        self._prefill_fns[key] = run
+        return run
+
+    # ------------------------------------------------------------ PD export
+    def export_kv(self, seq: SequenceState):
+        """DistFlow payload for PD-disaggregation: page run + metadata."""
+        k, v = self.pool.gather(seq.pages)
+        return {"k": np.asarray(k), "v": np.asarray(v),
+                "tokens": list(seq.tokens), "n_prompt": seq.n_prompt,
+                "n_cached": seq.n_cached}
+
+    def import_kv(self, payload, pages: List[int]) -> None:
+        idx = jnp.asarray(pages, jnp.int32)
+        self.pool.k = self.pool.k.at[:, idx].set(jnp.asarray(payload["k"]))
+        self.pool.v = self.pool.v.at[:, idx].set(jnp.asarray(payload["v"]))
+
+
+# ===========================================================================
+# Slot runner (recurrent / hybrid / cross-attention families)
+# ===========================================================================
+
+
+class SlotRunner:
+    def __init__(self, bundle: ModelBundle, params, n_slots: int, max_len: int,
+                 dtype=jnp.float32):
+        self.bundle = bundle
+        self.cfg = bundle.cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.dtype = dtype
+        self.cache = bundle.init_cache(n_slots, max_len, dtype)
+        self.free_slots = list(range(n_slots))
+        self._decode_jit = jax.jit(
+            lambda p, t, c: S.decode_step(self.cfg, p, t, c))
+        self._prefill_jits: Dict[int, Any] = {}
+
+    # batch-dim axis for every cache leaf except `length`
+    def _slot_slice(self, slot: int):
+        def f(path, a):
+            if path == "length":
+                return a[slot:slot + 1]
+            return a[:, slot:slot + 1]
+        return {k: f(k, v) for k, v in self.cache.items()}
+
+    def _slot_write(self, slot: int, sub):
+        for k, v in sub.items():
+            if k == "length":
+                self.cache[k] = self.cache[k].at[slot].set(v[0])
+            else:
+                self.cache[k] = self.cache[k].at[:, slot].set(v[:, 0])
+
+    def alloc_slot(self, seq: SequenceState) -> bool:
+        if not self.free_slots:
+            return False
+        seq.slot = self.free_slots.pop()
+        # reset slot length AND recurrent/conv state — stale KV is masked by
+        # length, but recurrent state would leak the previous occupant.
+        self.cache["length"] = self.cache["length"].at[seq.slot].set(0)
+        for key in ("state", "last_tm", "last_cm", "h", "conv"):
+            if key in self.cache:
+                self.cache[key] = self.cache[key].at[:, seq.slot].set(0)
+        return True
+
+    def free_slot(self, seq: SequenceState) -> None:
+        if seq.slot is not None:
+            self.free_slots.append(seq.slot)
+            seq.slot = None
+
+    def prefill_chunk(self, seq: SequenceState, chunk_tokens: List[int]
+                      ) -> Optional[jax.Array]:
+        c = len(chunk_tokens)
+        sub = self._slot_slice(seq.slot)
+        fn = self._prefill_fn(c)
+        extra = {k: jnp.asarray(v) for k, v in seq.extra.items()}
+        logits, sub = fn(self.params, jnp.asarray(chunk_tokens, jnp.int32)[None],
+                         sub, extra)
+        self._slot_write(seq.slot, sub)
+        seq.n_cached += c
+        if seq.n_cached >= seq.n_prompt:
+            return logits[0]
+        return None
+
+    def _prefill_fn(self, c: int):
+        if c in self._prefill_jits:
+            return self._prefill_jits[c]
+        cfg = self.cfg
+
+        def run(params, tokens, cache, extra):
+            return S.prefill(cfg, params, tokens, cache, **extra)
+
+        self._prefill_jits[c] = jax.jit(run)
+        return self._prefill_jits[c]
+
+    def decode(self, seqs: List[SequenceState]) -> jax.Array:
+        """Decode all active slots in one batched step; returns logits rows
+        aligned with `seqs` order."""
+        tokens = np.zeros((self.n_slots,), np.int32)
+        for s in seqs:
+            tokens[s.slot] = s.tokens[-1]
+        logits, self.cache = self._decode_jit(self.params,
+                                              jnp.asarray(tokens), self.cache)
+        for s in seqs:
+            s.n_cached = len(s.tokens)
+        return logits[jnp.asarray([s.slot for s in seqs])]
+
+    # state checkpointing (prefix cache for recurrent archs)
+    def snapshot_state(self, seq: SequenceState):
+        sub = self._slot_slice(seq.slot)
+        return jax.tree.map(np.asarray, sub)
+
+    def restore_state(self, seq: SequenceState, snap) -> None:
+        self._slot_write(seq.slot, jax.tree.map(jnp.asarray, snap))
+        seq.n_cached = int(snap["length"][0])
+
+    def export_kv(self, seq: SequenceState):
+        return {"state": self.snapshot_state(seq), "tokens": list(seq.tokens),
+                "n_prompt": seq.n_prompt, "n_cached": seq.n_cached}
+
+    def import_kv(self, payload, seq: SequenceState) -> None:
+        self.restore_state(seq, payload["state"])

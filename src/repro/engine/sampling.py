@@ -1,0 +1,35 @@
+"""Sampling for FLOWSERVE's model generator: greedy / temperature / top-p."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0      # 0 => greedy
+    top_p: float = 1.0
+    max_new_tokens: int = 64
+    stop_on_eos: bool = True
+
+
+def sample(logits: jax.Array, params: SamplingParams, key: jax.Array,
+           vocab_size: int) -> jax.Array:
+    """logits: (B, Vp) -> token ids (B,). Pad-vocab ids are masked."""
+    vp = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if vp > vocab_size:
+        logits = jnp.where(jnp.arange(vp)[None, :] >= vocab_size, -1e30, logits)
+    if params.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / params.temperature
+    if params.top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        cutoff_idx = jnp.sum(cum < params.top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+        logits = jnp.where(logits < cutoff, -1e30, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

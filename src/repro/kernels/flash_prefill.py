@@ -1,0 +1,114 @@
+"""Pallas TPU flash-attention prefill kernel (causal + sliding window +
+logit softcap — covers every assigned attention variant).
+
+Grid: (B, H, NQ, NK) with NK innermost: the running-softmax scratch
+persists across key blocks for a fixed query block. Causal/window block
+skipping prunes key blocks wholly outside the mask, which is where the
+sliding-window archs (mixtral, danube, gemma2-local) win their prefill
+FLOPs back. VMEM working set per step: q (Bq, hd), k/v (Bk, hd),
+acc (Bq, hd) fp32 — pick Bq=Bk=128..512 and MXU-aligned hd.
+Validated in interpret mode against ref.flash_prefill_ref.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, bq: int, bk: int, nk: int, softcap: Optional[float],
+            window: Optional[int], scale: float):
+    iq, ik = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * bq
+    k_start = ik * bk
+    # causal block skip: this key block starts after the last query row
+    relevant = k_start <= q_start + bq - 1
+    if window is not None:
+        # key block entirely below the window of every query row
+        relevant &= (k_start + bk - 1) > (q_start - window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                      # (Bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                      # (Bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos <= qpos
+        if window is not None:
+            mask &= kpos > (qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        pr = jnp.exp(s - m_cur)
+        corr = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(pr, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            pr, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array,
+                  softcap: Optional[float] = None,
+                  window: Optional[int] = None,
+                  block_q: int = 128, block_k: int = 128,
+                  interpret: bool = True) -> jax.Array:
+    """q: (B, S, H, hd); k, v: (B, S, Hkv, hd) -> (B, S, H, hd).
+    S must be a multiple of the block sizes (pad upstream)."""
+    b, s, h, hd = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    nq, nk = s // bq, s // bk
+
+    qh = q.transpose(0, 2, 1, 3)                                 # (B, H, S, hd)
+    kh = k.transpose(0, 2, 1, 3)                                 # (B, Hkv, S, hd)
+    vh = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_kernel, bq=bq, bk=bk, nk=nk, softcap=softcap,
+                               window=window, scale=1.0 / math.sqrt(hd))
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda bi, hi, qi, ki: (bi, hi // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda bi, hi, qi, ki: (bi, hi // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((b, h, s, hd), q.dtype),
+        interpret=interpret,
+    )(qh, kh, vh)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,74 @@
+"""Public jit'd wrappers for the kernel suite.
+
+``impl`` selects the backend:
+  * "pallas"    — the Pallas kernel (interpret mode on CPU; compiled on TPU)
+  * "ref"       — the pure-jnp oracle (fast on CPU; GSPMD-partitionable)
+  * "auto"      — pallas on TPU, ref elsewhere (the engine default)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_prefill import flash_prefill as _flash_pallas
+from repro.kernels.paged_attention import paged_attention as _paged_pallas
+from repro.kernels.rglru_scan import rglru as _rglru_pallas
+from repro.kernels.rwkv6_wkv import wkv6 as _wkv6_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return impl
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "window", "impl"))
+def paged_attention(q, k_pages, v_pages, block_tables, lengths,
+                    softcap: Optional[float] = None,
+                    window: Optional[int] = None, impl: str = "auto"):
+    impl = _resolve(impl)
+    if impl == "pallas":
+        return _paged_pallas(q, k_pages, v_pages, block_tables, lengths,
+                             softcap=softcap, window=window,
+                             interpret=not _on_tpu())
+    return _ref.paged_attention_ref(q, k_pages, v_pages, block_tables, lengths,
+                                    softcap=softcap, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "window", "block_q",
+                                             "block_k", "impl"))
+def flash_prefill(q, k, v, softcap: Optional[float] = None,
+                  window: Optional[int] = None, block_q: int = 128,
+                  block_k: int = 128, impl: str = "auto"):
+    impl = _resolve(impl)
+    if impl == "pallas":
+        return _flash_pallas(q, k, v, softcap=softcap, window=window,
+                             block_q=block_q, block_k=block_k,
+                             interpret=not _on_tpu())
+    return _ref.flash_prefill_ref(q, k, v, softcap=softcap, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def wkv6(r, k, v, w, u, chunk: int = 64, impl: str = "auto"):
+    impl = _resolve(impl)
+    if impl == "pallas":
+        return _wkv6_pallas(r, k, v, w, u, chunk=chunk, interpret=not _on_tpu())
+    y, _ = _ref.wkv6_ref(r, k, v, w, u)
+    return y
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_w", "impl"))
+def rglru(a, b, h0, chunk: int = 128, block_w: int = 128, impl: str = "auto"):
+    impl = _resolve(impl)
+    if impl == "pallas":
+        return _rglru_pallas(a, b, h0, chunk=chunk, block_w=block_w,
+                             interpret=not _on_tpu())
+    return _ref.rglru_ref(a, b, h0)

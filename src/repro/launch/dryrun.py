@@ -1,0 +1,308 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh) cell:
+    jit(step, in_shardings, out_shardings).lower(*ShapeDtypeStructs).compile()
+then record memory_analysis (fits-per-device proof), cost_analysis
+(FLOPs/bytes), and the collective schedule parsed from the compiled HLO.
+Exact roofline terms come from the unrolled per-block probes (see
+launch/probes.py and the scan-cost note in DESIGN.md).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                      # full matrix
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b \
+        --shape train_4k --mesh single --probes
+Results append to artifacts/dryrun.jsonl (one JSON per cell).
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, get_config, list_configs, shape_applicable
+from repro.launch import steps as ST
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.launch.probes import build_probes
+from repro.launch.roofline import (CellCost, collective_bytes,
+                                   cost_from_compiled, make_terms,
+                                   model_flops_for)
+from repro.launch.sharding import (batch_spec, cache_specs, named,
+                                   param_specs)
+from repro.models import serving as S
+from repro.models import transformer as T
+from repro.training.optimizer import init_opt_state
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+DTYPE = jnp.bfloat16
+
+
+def set_dtype(name: str) -> None:
+    global DTYPE
+    DTYPE = {"bf16": jnp.bfloat16, "f32": jnp.float32}[name]
+
+
+def _mem_stats(compiled) -> Dict[str, float]:
+    m = compiled.memory_analysis()
+    return {"argument_bytes": m.argument_size_in_bytes,
+            "output_bytes": m.output_size_in_bytes,
+            "temp_bytes": m.temp_size_in_bytes,
+            "alias_bytes": m.alias_size_in_bytes,
+            "peak_device_bytes": (m.argument_size_in_bytes
+                                  + m.output_size_in_bytes
+                                  + m.temp_size_in_bytes
+                                  - m.alias_size_in_bytes)}
+
+
+def compile_cell(arch: str, shape_name: str, multi_pod: bool,
+                 run_probes: bool = False, opt_flags: Dict[str, Any] = None
+                 ) -> Dict[str, Any]:
+    """opt_flags (hillclimb knobs, EXPERIMENTS.md §Perf):
+      microbatches: int — grad-accumulation override
+      perf: dict     — repro.models.perf_flags fields
+      fsdp: bool     — False = ZeRO-2-style (params/opt TP-only, replicated
+                       over data; right call for small models like rwkv6)
+      cp_attention   — context-parallel q rows for non-16-divisible heads
+    """
+    opt_flags = opt_flags or {}
+    from repro.models import perf_flags as PF
+    if opt_flags.get("perf"):
+        PF.set_flags(**opt_flags["perf"])
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": "multi" if multi_pod else "single",
+                           "n_chips": 512 if multi_pod else 256,
+                           "dtype": "f32" if DTYPE == jnp.float32 else "bf16"}
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        return rec
+
+    from repro.launch.sharding import block_param_specs
+    from repro.models import actsharding as AS
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp = dp_axes(mesh)
+    mode = "train" if shape.kind == "train" else "serve"
+    if not opt_flags.get("fsdp", True):
+        mode = "serve"  # ZeRO-2-style: weights TP-only, no data-axis gather
+    rec["opt_flags"] = {k: v for k, v in opt_flags.items() if k != "perf"}
+    if opt_flags.get("perf"):
+        rec["opt_flags"]["perf"] = dict(opt_flags["perf"])
+
+    params_like = jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0), DTYPE))
+    pspecs = param_specs(cfg, params_like, mode, dp)
+    batch = ST.example_batch(cfg, shape, DTYPE)
+    t0 = time.monotonic()
+
+    tags = {}
+    if cfg.moe is not None:
+        # MoE dispatch tensors: the group reshape merges the data-sharded
+        # batch and model-sharded seq dims, dropping the model sharding —
+        # re-pin tokens to DP and the expert hidden dim to the model axis.
+        tags.update({
+            "moe_tokens": NamedSharding(mesh, P(dp, None, None)),
+            "moe_hidden": NamedSharding(mesh, P(dp, None, None, "model")),
+            "moe_out": NamedSharding(mesh, P(dp, None, None, None)),
+        })
+    if cfg.vision is not None or cfg.encoder is not None:
+        # cross-attention q/o: batch over DP, heads over model (the SP-
+        # sharded residual stream otherwise leaks replicated score tensors)
+        tags["cross_q"] = NamedSharding(mesh, P(dp, None, "model", None))
+    if opt_flags.get("cp_attention"):
+        tags["attn_q_seq"] = NamedSharding(mesh, P(dp, "model", None, None))
+    if opt_flags.get("moe_cshard"):
+        # serve-only: shard the dispatch capacity dim over model
+        tags["moe_hidden"] = NamedSharding(mesh, P(dp, None, "model", None))
+        tags["moe_out"] = NamedSharding(mesh, P(dp, None, "model", None))
+    if tags:
+        AS.set_tag_specs(tags)
+    # all modes: pin per-layer weight slices + LICM barrier (see actsharding)
+    AS.set_block_specs(named(mesh, block_param_specs(cfg, params_like,
+                                                     mode, dp)))
+    if shape.kind == "train":
+        # sequence-parallel layer-boundary activations: saved remat
+        # residuals shrink 16x and XLA pairs gather/reduce-scatter per layer
+        if opt_flags.get("act") == "batch_all":
+            # recurrent towers: SP (seq-over-model) forces per-layer gathers;
+            # shard batch over every axis instead (pure 256-way DP acts)
+            AS.set_act_spec(NamedSharding(
+                mesh, P(tuple(dp) + ("model",), None, None)))
+        else:
+            AS.set_act_spec(NamedSharding(mesh, P(dp, "model", None)))
+        opt_like = jax.eval_shape(lambda: init_opt_state(params_like))
+        ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+        mb = (opt_flags or {}).get("microbatches",
+                                   ST.default_microbatches(cfg))
+        rec["microbatches"] = mb
+        step = ST.build_train_step(cfg, microbatches=mb)
+        extra_keys = [k for k in batch if k not in ("tokens", "targets", "mask")]
+        extra_like = {k: batch[k] for k in extra_keys}
+        extra_specs = {k: batch_spec(shape, dp, 3) for k in extra_keys}
+
+        def fn(params, opt, tokens, targets, mask, extra):
+            return step(params, opt, tokens, targets, mask, extra)
+
+        in_sh = named(mesh, (pspecs, ospecs, batch_spec(shape, dp),
+                             batch_spec(shape, dp), batch_spec(shape, dp),
+                             extra_specs))
+        out_sh = named(mesh, (pspecs, ospecs,
+                              {"grad_norm": P(), "lr": P(), "loss": P()}))
+        jf = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(0, 1))
+        lowered = jf.lower(params_like, opt_like, batch["tokens"],
+                           batch["targets"], batch["mask"], extra_like)
+    elif shape.kind == "prefill":
+        step = ST.build_prefill_step(cfg)
+        extra_keys = [k for k in batch if k != "tokens"]
+        extra_like = {k: batch[k] for k in extra_keys}
+        extra_specs = {k: batch_spec(shape, dp, 3) for k in extra_keys}
+        cache_like = jax.eval_shape(
+            lambda: S.init_cache(cfg, shape.global_batch, shape.seq_len, DTYPE))
+        cspecs = cache_specs(cfg, cache_like, shape, dp)
+        logits_spec = P(dp if shape.global_batch >= 16 else None, "model")
+        in_sh = named(mesh, (pspecs, batch_spec(shape, dp), extra_specs))
+        # prefill emits the cache minus `length` bookkeeping differences:
+        out_cache_spec = {k: v for k, v in cspecs.items()}
+        out_sh = named(mesh, (logits_spec, out_cache_spec))
+        jf = jax.jit(lambda p, t, e: step(p, t, e), in_shardings=in_sh,
+                     out_shardings=out_sh)
+        lowered = jf.lower(params_like, batch["tokens"], extra_like)
+    else:  # decode
+        step = ST.build_decode_step(cfg)
+        use_ring = (PF.get().ring_buffer_decode
+                    and cfg.attn_kind in ("swa", "hybrid_rglru"))
+        cache_like = jax.eval_shape(
+            lambda: S.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                 DTYPE, ring=use_ring))
+        cspecs = cache_specs(cfg, cache_like, shape, dp)
+        tok_spec = P(dp) if shape.global_batch >= 16 else P()
+        logits_spec = P(dp if shape.global_batch >= 16 else None, "model")
+        in_sh = named(mesh, (pspecs, tok_spec, cspecs))
+        out_sh = named(mesh, (logits_spec, cspecs))
+        jf = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(2,))
+        lowered = jf.lower(params_like, batch["token"], cache_like)
+
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.monotonic() - t0, 1)
+    rec["status"] = "ok"
+    rec.update(_mem_stats(compiled))
+    full_cost = cost_from_compiled(compiled)
+    rec["full_artifact"] = {"flops_per_chip": full_cost.flops,
+                            "bytes_per_chip": full_cost.bytes_hbm,
+                            "collectives": full_cost.coll}
+
+    if run_probes:
+        total = CellCost()
+        probe_recs = []
+        for name, fn, inputs, in_specs, mult in build_probes(
+                cfg, shape, params_like, dp, DTYPE, mode=mode,
+                act_mode=opt_flags.get("act")):
+            tp = time.monotonic()
+            pjf = jax.jit(fn, in_shardings=named(mesh, in_specs))
+            pcomp = pjf.lower(*inputs).compile()
+            c = cost_from_compiled(pcomp)
+            total.add(c, mult)
+            probe_recs.append({"name": name, "mult": mult,
+                               "flops_per_chip": c.flops,
+                               "bytes_per_chip": c.bytes_hbm,
+                               "collectives": c.coll,
+                               "compile_s": round(time.monotonic() - tp, 1)})
+        rec["probes"] = probe_recs
+        n_chips = rec["n_chips"]
+        # f32 probe compiles avoid the CPU backend's bf16-dot emulation
+        # copies; halving bytes/wire then models the native-bf16 TPU program
+        # (fp32 softmax/optimizer state slightly underestimated — noted in
+        # EXPERIMENTS.md). FLOPs are dtype-independent.
+        scale = 0.5 if DTYPE == jnp.float32 else 1.0
+        total.bytes_hbm *= scale
+        total.coll = {k: v * scale for k, v in total.coll.items()}
+        rec["bytes_scale"] = scale
+        terms = make_terms(total, n_chips, model_flops_for(cfg, shape),
+                           multi_pod)
+        rec["roofline"] = {
+            "compute_s": terms.compute_s, "memory_s": terms.memory_s,
+            "collective_s": terms.collective_s, "dominant": terms.dominant,
+            "model_flops": terms.model_flops,
+            "hlo_flops_global": terms.hlo_flops_global,
+            "useful_ratio": terms.useful_flops_ratio,
+            "wire_bytes_per_chip": total.wire_bytes(),
+        }
+    # cleanup AFTER probes — probes must see the same tags/flags the full
+    # artifact compiled with
+    AS.set_act_spec(None)
+    AS.set_block_specs(None)
+    AS.set_tag_specs(None)
+    PF.reset()
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--probes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun.jsonl")
+    ap.add_argument("--dtype", default="bf16", choices=["bf16", "f32"],
+                    help="f32 avoids the CPU backend's bf16-dot emulation "
+                         "copies; peak/2 then estimates the TPU-native "
+                         "bf16 footprint (see EXPERIMENTS.md)")
+    ap.add_argument("--skip-done", action="store_true",
+                    help="skip cells already recorded in --out")
+    args = ap.parse_args()
+    set_dtype(args.dtype)
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if args.skip_done and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("status") in ("ok", "skipped"):
+                        done.add((r["arch"], r["shape"], r["mesh"],
+                                  bool(r.get("probes"))))
+                except json.JSONDecodeError:
+                    pass
+
+    archs = [args.arch] if args.arch else list_configs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                key = (arch, shape, "multi" if multi else "single", args.probes)
+                if key in done:
+                    print(f"[dryrun] skip (done) {key}")
+                    continue
+                print(f"[dryrun] {arch} × {shape} × "
+                      f"{'multi' if multi else 'single'} ...", flush=True)
+                try:
+                    rec = compile_cell(arch, shape, multi, run_probes=args.probes)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if multi else "single",
+                           "status": "error", "error": repr(e),
+                           "trace": traceback.format_exc()[-2000:]}
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+                status = rec.get("status")
+                extra = (f" compile={rec.get('compile_s')}s "
+                         f"peak={rec.get('peak_device_bytes', 0)/1e9:.2f}GB/chip"
+                         if status == "ok" else rec.get("reason", rec.get("error", "")))
+                print(f"[dryrun]   -> {status} {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: re-probe the three focus cells under optimized
+configurations and append (variant-tagged) records to
+artifacts/hillclimb.jsonl. Baselines live in artifacts/dryrun_probes.jsonl.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb [--only mixtral_windowed ...]
+"""
+import argparse
+import json
+import traceback
+
+from repro.launch import dryrun as DR
+
+# (variant name, arch, shape, opt_flags)
+VARIANTS = [
+    # Cell A — mixtral decode_32k (paper-representative: SuperPod MoE decode)
+    ("mixtral_decode_windowed", "mixtral-8x7b", "decode_32k",
+     {"perf": {"windowed_decode": True}}),
+    ("mixtral_long500k_windowed", "mixtral-8x7b", "long_500k",
+     {"perf": {"windowed_decode": True}}),
+    # Cell B — granite prefill_32k (worst roofline fraction)
+    ("granite_prefill_cp", "granite-moe-3b-a800m", "prefill_32k",
+     {"cp_attention": True}),
+    # Cell C — rwkv6 train_4k (most collective-bound)
+    ("rwkv6_train_zero2", "rwkv6-1.6b", "train_4k", {"fsdp": False}),
+    # iteration 2 (windowed-gather + SP-recurrent hypotheses refuted):
+    ("mixtral_decode_ring", "mixtral-8x7b", "decode_32k",
+     {"perf": {"ring_buffer_decode": True}}),
+    ("mixtral_long500k_ring", "mixtral-8x7b", "long_500k",
+     {"perf": {"ring_buffer_decode": True}}),
+    ("rwkv6_train_dp256", "rwkv6-1.6b", "train_4k",
+     {"fsdp": False, "act": "batch_all"}),
+    ("granite_prefill_cp_cshard", "granite-moe-3b-a800m", "prefill_32k",
+     {"cp_attention": True, "moe_cshard": True}),
+    # extras beyond the required three
+    ("danube_prefill_banded", "h2o-danube-3-4b", "prefill_32k",
+     {"perf": {"banded_swa_prefill": True}}),
+    ("mixtral_prefill_banded", "mixtral-8x7b", "prefill_32k",
+     {"perf": {"banded_swa_prefill": True}}),
+    ("rgemma_prefill_cp", "recurrentgemma-2b", "prefill_32k",
+     {"cp_attention": True}),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--out", default="artifacts/hillclimb.jsonl")
+    ap.add_argument("--dtype", default="f32", choices=["bf16", "f32"])
+    args = ap.parse_args()
+    DR.set_dtype(args.dtype)
+
+    for name, arch, shape, flags in VARIANTS:
+        if args.only and name not in args.only:
+            continue
+        print(f"[hillclimb] {name}: {arch} × {shape} flags={flags}", flush=True)
+        try:
+            rec = DR.compile_cell(arch, shape, multi_pod=False,
+                                  run_probes=True, opt_flags=flags)
+        except Exception as e:  # noqa: BLE001
+            rec = {"status": "error", "error": repr(e),
+                   "trace": traceback.format_exc()[-1500:]}
+        rec["variant"] = name
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+        rf = rec.get("roofline", {})
+        print(f"[hillclimb]   -> {rec.get('status')} "
+              f"dom={rf.get('dominant')} comp={rf.get('compute_s', 0):.3e} "
+              f"mem={rf.get('memory_s', 0):.3e} "
+              f"coll={rf.get('collective_s', 0):.3e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

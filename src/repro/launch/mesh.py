@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Single pod: 16×16 = 256 chips, axes ("data", "model").
+Multi-pod:  2×16×16 = 512 chips, axes ("pod", "data", "model") — the pod
+axis is a pure data-parallel (DCN-connected) replica dimension.
+
+A FUNCTION, not a module constant: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh for CPU tests (requires forced host device count)."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def dp_axes(mesh) -> tuple:
+    """The data-parallel axes of a mesh (pod folds into DP)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

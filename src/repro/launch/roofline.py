@@ -1,0 +1,164 @@
+"""Roofline accounting from compiled XLA artifacts.
+
+Three terms per (arch × shape × mesh) cell, all in seconds:
+    compute    = FLOPs_per_chip / peak_FLOPs
+    memory     = bytes_per_chip / HBM_bw
+    collective = collective_bytes_per_chip / (links × link_bw)
+
+Sources: ``compiled.cost_analysis()`` (per-device FLOPs / bytes accessed of
+the partitioned module) and the compiled HLO text for collective operand
+bytes. Scanned artifacts undercount loop bodies, so cells are priced from
+the unrolled per-block probes × layer multipliers (launch/probes.py).
+
+Hardware constants (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI with 2 usable links per axis-neighbor torus direction.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW_PER_LINK = 50e9
+ICI_LINKS = 2                  # effective concurrent links per collective
+DCN_BW = 25e9                  # per-host inter-pod bandwidth (pod axis)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum byte sizes of every array shape in an HLO type string (handles
+    tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes summed over the module. Fusion
+    bodies are included; while bodies appear once (probe-scaling applies).
+    Result bytes are the standard proxy for wire bytes (all-gather output,
+    all-reduce ring ≈ 2× — we report raw and let the term apply factors)."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if " = " not in ls:
+            continue
+        _, rhs = ls.split(" = ", 1)
+        for kind in _COLLECTIVES:
+            # match "bf16[...] all-reduce(" or "(f32[..],..) all-to-all("
+            if f" {kind}(" in rhs or rhs.startswith(f"{kind}("):
+                type_part = rhs.split(f" {kind}(")[0] if f" {kind}(" in rhs else ""
+                out[kind] += _shape_bytes(type_part)
+                break
+        # also catch *-start forms (async collectives)
+        for kind in _COLLECTIVES:
+            if f" {kind}-start(" in rhs:
+                type_part = rhs.split(f" {kind}-start(")[0]
+                out[kind] += _shape_bytes(type_part)
+                break
+    return out
+
+
+# wire-traffic multipliers per collective kind (ring algorithms, n large)
+_WIRE_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+@dataclass
+class CellCost:
+    flops: float = 0.0                # per-chip
+    bytes_hbm: float = 0.0            # per-chip "bytes accessed"
+    coll: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "CellCost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes_hbm += other.bytes_hbm * mult
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v * mult
+
+    def wire_bytes(self) -> float:
+        return sum(v * _WIRE_FACTOR.get(k, 1.0) for k, v in self.coll.items())
+
+
+def cost_from_compiled(compiled) -> CellCost:
+    ca = compiled.cost_analysis()
+    txt = compiled.as_text()
+    return CellCost(flops=float(ca.get("flops", 0.0)),
+                    bytes_hbm=float(ca.get("bytes accessed", 0.0)),
+                    coll={k: float(v) for k, v in collective_bytes(txt).items()})
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float                # 6·N·D (global, analytic)
+    hlo_flops_global: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        # optimistic overlap model: the dominant term is the floor
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops_global if self.hlo_flops_global else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the pure-compute roofline achieved by the modeled
+        step time: t_compute_ideal(MODEL_FLOPS) / t_step."""
+        ideal = self.model_flops and self.model_flops  # placeholder, set below
+        return 0.0
+
+
+def make_terms(cost: CellCost, n_chips: int, model_flops_global: float,
+               multi_pod: bool = False) -> RooflineTerms:
+    compute_s = cost.flops / PEAK_FLOPS
+    memory_s = cost.bytes_hbm / HBM_BW
+    # pod-axis traffic rides DCN; intra-pod rides ICI. Without per-axis
+    # attribution from HLO we price all wire bytes at ICI (single-pod) and
+    # report the multi-pod delta separately in EXPERIMENTS.md.
+    coll_s = cost.wire_bytes() / (ICI_LINKS * ICI_BW_PER_LINK)
+    return RooflineTerms(compute_s=compute_s, memory_s=memory_s,
+                         collective_s=coll_s,
+                         model_flops=model_flops_global,
+                         hlo_flops_global=cost.flops * n_chips)
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N·D for train, 2·N·D for inference (per step)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch                     # one token per sequence
+    return 2.0 * n_active * tokens

@@ -1,0 +1,115 @@
+"""Serving launcher: wire FLOWSERVE TEs + a model-serving JE + the
+autoscaler into a runnable deployment (CPU: smoke-config models).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b \
+        --mode colocated --requests 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config, smoke_config
+from repro.core.heatmap import HeatmapStudy
+from repro.core.predictor import (DecodeLengthPredictor, PredictorConfig,
+                                  synth_trace, train_predictor)
+from repro.core.scheduling import (DistributedScheduler, SchedRequest,
+                                   TEHandle)
+from repro.engine import EngineConfig, FlowServe, Request, SamplingParams
+from repro.engine.tokenizer import ByteTokenizer
+from repro.models import get_model
+
+
+def build_te(bundle, params, mode: str, name: str) -> FlowServe:
+    ecfg = EngineConfig(mode=mode, n_pages=256, page_size=8, n_slots=8,
+                        max_len=256, max_batch_tokens=64, chunk_size=16,
+                        max_decode_batch=8)
+    return FlowServe(bundle, params, ecfg, name=name)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--mode", default="colocated",
+                    choices=["colocated", "pd", "scheduled"])
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=24)
+    args = ap.parse_args()
+
+    bundle = get_model(args.arch, smoke=True)
+    params = bundle.init_params(jax.random.PRNGKey(0), jnp.float32)
+    tok = ByteTokenizer()
+    sp = SamplingParams(temperature=0.0, max_new_tokens=args.max_new,
+                        stop_on_eos=False)
+    prompts = [f"request {i}: explain serverless llm serving" for i in range(args.requests)]
+
+    if args.mode == "colocated":
+        te = build_te(bundle, params, "colocated", "te-0")
+        t0 = time.monotonic()
+        for p in prompts:
+            te.add_request(Request(prompt_tokens=tok.encode(p), sampling=sp))
+        comps = te.run_to_completion()
+        dt = time.monotonic() - t0
+        print(f"served {len(comps)} requests in {dt:.2f}s "
+              f"({sum(len(c.tokens) for c in comps)/dt:.1f} tok/s)")
+        for c in comps[:3]:
+            print(f"  {c.req_id}: ttft={c.ttft*1e3:.0f}ms tpot={c.tpot*1e3:.1f}ms "
+                  f"text={tok.decode(c.tokens)[:40]!r}")
+        print("prefix-cache:", te.prefix_cache_stats())
+        return
+
+    if args.mode == "pd":
+        pe = build_te(bundle, params, "prefill", "te-p0")
+        de = build_te(bundle, params, "decode", "te-d0")
+        pe.distflow.link_cluster([de.distflow])
+        for p in prompts:
+            pe.add_request(Request(prompt_tokens=tok.encode(p), sampling=sp))
+        comps = []
+        for _ in range(10000):
+            if not (pe.has_work() or de.has_work()):
+                break
+            pe.step()
+            for rid in pe.pop_migratable():
+                payload = pe.export_kv(rid)
+                from repro.engine.distflow import BufferInfo
+                pe.distflow.transfer(
+                    BufferInfo(owner=pe.name, tier="npu", payload=payload),
+                    BufferInfo(owner=de.name, tier="npu",
+                               deliver=lambda pl: de.import_request(pl)))
+                pe.release_request(rid)
+            comps.extend(de.step())
+        print(f"PD-disaggregated: {len(comps)} completions; "
+              f"KV moved {pe.distflow.bytes_moved()/1e6:.2f} MB")
+        return
+
+    # scheduled: JE + Algorithm 1 over 2 colocated + 1 PD pair
+    cfg_full = get_config(args.arch)
+    hs = HeatmapStudy(cfg_full)
+    xs, ys, _ = synth_trace(2000, PredictorConfig())
+    pparams, acc = train_predictor(PredictorConfig(), xs, ys)
+    pred = DecodeLengthPredictor(PredictorConfig(), pparams)
+    tes = [TEHandle("te-c0", "colocated", engine=build_te(bundle, params, "colocated", "te-c0")),
+           TEHandle("te-c1", "colocated", engine=build_te(bundle, params, "colocated", "te-c1")),
+           TEHandle("te-pd0", "pd_pair")]
+    ds = DistributedScheduler(tes, hs.combined(), hs.prefill_lens,
+                              hs.decode_ratios, predictor=pred)
+    for p in prompts:
+        toks = tok.encode(p)
+        te = ds.dist_sched(SchedRequest(tokens=toks))
+        ds.commit(SchedRequest(tokens=toks), te)
+        if te.engine is not None:
+            te.engine.add_request(Request(prompt_tokens=toks, sampling=sp))
+    done = 0
+    for te in tes:
+        if te.engine is not None:
+            done += len(te.engine.run_to_completion())
+    print(f"scheduled mode: {done} completions; decisions={ds.decisions} "
+          f"(predictor acc={acc:.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,170 @@
+"""Sharding rules: ModelConfig + step kind → PartitionSpec pytrees.
+
+Policy (DESIGN.md §5):
+  * `model` axis = tensor parallelism. Attention projections shard the flat
+    head dim (always 16-divisible across the zoo) when n_heads % 16 == 0;
+    archs with awkward head counts (granite 24H, recurrentgemma 10H)
+    replicate attention and shard only FFN / vocab / recurrence width.
+  * `data` (+ `pod`) axes = batch DP; in train mode weights/opt-state are
+    additionally FSDP-sharded over `data` on the d_model dim (ZeRO-style);
+    XLA inserts the all-gathers.
+  * decode caches shard batch over DP and KV sequence over `model`
+    (flash-decode via GSPMD psum); at batch=1 (long_500k) the sequence
+    shards over (data×model) — context parallelism.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+TP = 16  # model-axis size of the production mesh
+
+
+def _div(n: int, k: int = TP) -> bool:
+    return n % k == 0
+
+
+def param_specs(cfg: ModelConfig, params_like, mode: str, dp: Tuple[str, ...]
+                ) -> Any:
+    """Pytree of PartitionSpec matching `params_like` (train adds FSDP on
+    d_model over `data`). `dp` = the mesh's DP axes (("data",) or
+    ("pod","data")); FSDP always uses the intra-pod "data" axis."""
+    heads_ok = cfg.tp_heads_ok(TP)
+    fsdp = "data" if mode == "train" else None
+
+    def spec_for(path: str, leaf) -> P:
+        nd = leaf.ndim
+        dims: list = [None] * nd
+
+        def last(ax):       # shard last dim
+            dims[-1] = ax
+
+        def second_last(ax):
+            dims[-2] = ax
+
+        name = path
+        if "embed" in name:
+            if _div(cfg.padded_vocab):
+                dims[0] = "model"
+                if fsdp and _div(cfg.d_model, TP):
+                    dims[1] = fsdp
+            else:
+                dims[1] = "model"
+            return P(*dims)
+        if "lm_head" in name:
+            dims[-1] = "model"
+            if fsdp:
+                dims[-2] = fsdp
+            return P(*dims)
+        if any(k in name for k in ("['wq']", "['wk']", "['wv']")):
+            if heads_ok:
+                last("model")
+            if fsdp:
+                second_last(fsdp)
+            return P(*dims)
+        if "['wo']" in name:
+            if heads_ok:
+                second_last("model")
+            if fsdp:
+                last(fsdp)
+            return P(*dims)
+        if any(k in name for k in ("['w_gate']", "['w_up']", "['cm_k']")):
+            last("model")
+            if fsdp:
+                second_last(fsdp)
+            return P(*dims)
+        if any(k in name for k in ("['w_down']", "['cm_v']")):
+            second_last("model")
+            if fsdp:
+                last(fsdp)
+            return P(*dims)
+        if any(k in name for k in ("['wr']", "['wg']", "['cm_r']")):
+            last("model")          # rwkv projections (head-aligned, 32H)
+            if fsdp:
+                second_last(fsdp)
+            return P(*dims)
+        if any(k in name for k in ("['w_in']", "['w_gate_in']")):
+            last("model")          # rglru width
+            if fsdp:
+                second_last(fsdp)
+            return P(*dims)
+        if "['w_out']" in name and "rec" in name:
+            second_last("model")
+            if fsdp:
+                last(fsdp)
+            return P(*dims)
+        if any(k in name for k in ("['wa']", "['wx']")):
+            last("model")
+            return P(*dims)
+        if any(k in name for k in ("['conv_w']", "['conv_b']", "['lambda_p']")):
+            last("model")
+            return P(*dims)
+        # norms, routers, loras, gates, bonus — replicated
+        return P(*dims)
+
+    flat = jax.tree_util.tree_flatten_with_path(params_like)[0]
+    specs = [spec_for(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat]
+    return jax.tree.unflatten(jax.tree.structure(params_like), specs)
+
+
+def cache_specs(cfg: ModelConfig, cache_like, shape: ShapeConfig,
+                dp: Tuple[str, ...]) -> Any:
+    """Decode/prefill cache sharding. k/v: (L, B, S, Hkv, hd)."""
+    batch_shardable = shape.global_batch >= 16
+
+    def spec_for(path: str, leaf) -> P:
+        name = path
+        if "length" in name:
+            return P(dp) if batch_shardable else P()
+        if "['k']" in name or "['v']" in name:
+            if batch_shardable:
+                return P(None, dp, "model", None, None)
+            return P(None, None, ("data", "model"), None, None)
+        if "cross_k" in name or "cross_v" in name:
+            return P(None, dp if batch_shardable else None, None, None, None)
+        if "['state']" in name:       # rwkv (L,B,H,hdk,hdv)
+            return P(None, dp if batch_shardable else None,
+                     "model" if cfg.tp_heads_ok(TP) else None, None, None)
+        if "last_tm" in name or "last_cm" in name:
+            return P(None, dp if batch_shardable else None, None)
+        if "['h']" in name:           # rglru (L,B,W)
+            return P(None, dp if batch_shardable else None, "model")
+        if "['conv']" in name:        # (L,B,cw-1,W)
+            return P(None, dp if batch_shardable else None, None, "model")
+        return P()
+
+    flat = jax.tree_util.tree_flatten_with_path(cache_like)[0]
+    specs = [spec_for(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat]
+    return jax.tree.unflatten(jax.tree.structure(cache_like), specs)
+
+
+def batch_spec(shape: ShapeConfig, dp: Tuple[str, ...], ndim: int = 2) -> P:
+    """Token batches: batch over DP axes."""
+    if shape.global_batch < 16:
+        return P(*([None] * ndim))
+    return P(dp, *([None] * (ndim - 1)))
+
+
+def block_param_specs(cfg: ModelConfig, params_like, mode: str,
+                      dp: Tuple[str, ...]) -> Dict[str, Any]:
+    """Per-layer weight specs with the leading (stacked-layer) dim
+    stripped — used by actsharding.set_block_specs to pin scan-body weight
+    slices to their FSDP storage sharding (gather-inside-loop)."""
+    full = param_specs(cfg, params_like, mode, dp)
+    out: Dict[str, Any] = {}
+    for tower in ("blocks", "enc_blocks", "cross_blocks"):
+        if tower in full:
+            out[tower] = jax.tree.map(lambda s: P(*s[1:]), full[tower],
+                                      is_leaf=lambda x: isinstance(x, P))
+    return out
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,98 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from artifacts/*.jsonl.
+
+    PYTHONPATH=src python -m repro.launch.summarize
+"""
+from __future__ import annotations
+
+import json
+import os
+from collections import OrderedDict
+
+ART_DIR = "artifacts"
+HBM_BUDGET = 16e9   # v5e per-chip
+
+
+def load(path):
+    cells = OrderedDict()
+    if not os.path.exists(path):
+        return cells
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            key = (r.get("arch"), r.get("shape"), r.get("mesh"),
+                   r.get("dtype", "bf16"))
+            cells[key] = r  # last record wins
+    return cells
+
+
+def dryrun_table() -> str:
+    cells = load(os.path.join(ART_DIR, "dryrun.jsonl"))
+    f32 = {k[:3]: v for k, v in cells.items() if k[3] == "f32"}
+    out = ["| arch | shape | mesh | status | compile_s | peak GB/chip "
+           "(bf16-emul UB) | TPU est GB/chip | fits 16GB | collectives (MB, "
+           "ag/ar/rs/a2a/cp) |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, mesh, dtype), r in cells.items():
+        if dtype != "bf16":
+            continue
+        if r["status"] == "skipped":
+            out.append(f"| {arch} | {shape} | {mesh} | skipped — "
+                       f"{r['reason'][:40]} | | | | | |")
+            continue
+        if r["status"] == "error":
+            out.append(f"| {arch} | {shape} | {mesh} | ERROR {r['error'][:40]}"
+                       f" | | | | | |")
+            continue
+        peak = r["peak_device_bytes"] / 1e9
+        est = peak
+        note = ""
+        fkey = (arch, shape, mesh)
+        if fkey in f32 and f32[fkey].get("status") == "ok":
+            est = f32[fkey]["peak_device_bytes"] / 2e9
+            note = " (f32/2)"
+        coll = r.get("full_artifact", {}).get("collectives", {})
+        cm = "/".join(f"{coll.get(k, 0)/1e6:.0f}" for k in
+                      ("all-gather", "all-reduce", "reduce-scatter",
+                       "all-to-all", "collective-permute"))
+        fits = "yes" if est <= HBM_BUDGET / 1e9 else "NO"
+        out.append(f"| {arch} | {shape} | {mesh} | ok | {r['compile_s']} | "
+                   f"{peak:.2f} | {est:.2f}{note} | {fits} | {cm} |")
+    return "\n".join(out)
+
+
+def roofline_table() -> str:
+    cells = load(os.path.join(ART_DIR, "dryrun_probes.jsonl"))
+    out = ["| arch | shape | compute_s | memory_s | collective_s | dominant "
+           "| MODEL_FLOPS | useful ratio | roofline frac | move-the-needle |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, mesh, dtype), r in cells.items():
+        if r.get("status") != "ok" or "roofline" not in r or mesh != "single":
+            continue
+        rf = r["roofline"]
+        step = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        ideal = rf["model_flops"] / (r["n_chips"] * 197e12)
+        frac = ideal / step if step else 0.0
+        hint = {
+            "compute": "cut non-useful FLOPs (remat/attention masking)",
+            "memory": "shrink bytes touched (dtype, fusion, cache layout)",
+            "collective": "re-shard to cut wire bytes / overlap collectives",
+        }[rf["dominant"]]
+        out.append(f"| {arch} | {shape} | {rf['compute_s']:.2e} | "
+                   f"{rf['memory_s']:.2e} | {rf['collective_s']:.2e} | "
+                   f"{rf['dominant']} | {rf['model_flops']:.2e} | "
+                   f"{rf['useful_ratio']:.2f} | {frac:.3f} | {hint} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    print("## §Dry-run\n")
+    print(dryrun_table())
+    print("\n## §Roofline\n")
+    print(roofline_table())
+
+
+if __name__ == "__main__":
+    main()

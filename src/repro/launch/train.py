@@ -1,0 +1,52 @@
+"""Training launcher (fine-tune jobs — the TRAINING job kind).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b \
+        --steps 100 --ckpt-dir /tmp/ckpt --resume
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import DataConfig, PackedDataset
+from repro.models import get_model
+from repro.training import (CheckpointManager, OptimizerConfig, TrainConfig,
+                            train)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full config (requires real accelerators)")
+    args = ap.parse_args()
+
+    bundle = get_model(args.arch, smoke=not args.full)
+    params = bundle.init_params(jax.random.PRNGKey(0),
+                                jnp.bfloat16 if args.full else jnp.float32)
+    ds = PackedDataset(DataConfig(seq_len=args.seq_len, batch_size=args.batch,
+                                  n_docs=2048))
+    tcfg = TrainConfig(
+        steps=args.steps, log_every=10, ckpt_every=args.ckpt_every,
+        microbatches=args.microbatches,
+        opt=OptimizerConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5),
+                            total_steps=args.steps))
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    _, stats = train(bundle, params, ds.batches(epochs=1000), tcfg, ckpt=ckpt,
+                     resume=args.resume)
+    print(f"done: loss {stats['loss_first']:.3f} -> {stats['loss_last']:.3f} "
+          f"in {stats['wall']:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

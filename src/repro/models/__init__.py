@@ -1,0 +1,1 @@
+from repro.models.model_factory import ModelBundle, get_model, cross_entropy  # noqa: F401

@@ -1,0 +1,88 @@
+"""Activation-sharding policy hook.
+
+The model code is mesh-agnostic; the launcher installs a PartitionSpec for
+inter-layer activations (the scan carry — also the per-layer remat
+residual). For train_4k on the production mesh this is
+P(("pod","data"), "model", None): batch over DP, sequence over TP
+(Megatron-style sequence parallelism), which shrinks saved residuals 16×
+and lets XLA insert the gather/reduce-scatter pair per layer.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+_ACT_SPEC: Optional[object] = None
+_BLOCK_SPECS: Optional[dict] = None
+
+
+def set_act_spec(spec) -> None:
+    global _ACT_SPEC
+    _ACT_SPEC = spec
+
+
+def get_act_spec():
+    return _ACT_SPEC
+
+
+def constrain(x: jax.Array) -> jax.Array:
+    if _ACT_SPEC is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, _ACT_SPEC)
+
+
+_TAG_SPECS: dict = {}
+
+
+def set_tag_specs(specs: Optional[dict]) -> None:
+    """Named constraint points (e.g. MoE dispatch tensors) installed by the
+    launcher. Keys: 'moe_tokens' (G,Tg,D), 'moe_hidden' (G,E,C,F),
+    'moe_out' (G,E,C,D)."""
+    global _TAG_SPECS
+    _TAG_SPECS = specs or {}
+
+
+def _compatible(x, sharding) -> bool:
+    """Every sharded dim must divide evenly (skip e.g. group=1 MoE decode)."""
+    try:
+        spec = sharding.spec
+        mesh = sharding.mesh
+    except AttributeError:
+        return True
+    for dim, axes in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))):
+        if axes is None:
+            continue
+        axes = axes if isinstance(axes, tuple) else (axes,)
+        n = 1
+        for a in axes:
+            n *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+        if dim % n != 0:
+            return False
+    return True
+
+
+def constrain_tag(x: jax.Array, tag: str) -> jax.Array:
+    spec = _TAG_SPECS.get(tag)
+    if spec is None or not _compatible(x, spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def set_block_specs(specs: Optional[dict]) -> None:
+    """Per-layer weight shardings (leading layer dim stripped). Installing
+    these pins each scan iteration's weight slice to its FSDP storage
+    sharding at body entry, so GSPMD gathers weights *inside* the (remat'd)
+    loop — one layer live at a time — instead of hoisting an all-layer
+    gather out of the scan (which OOMs MoE train cells)."""
+    global _BLOCK_SPECS
+    _BLOCK_SPECS = specs
+
+
+def constrain_block(p, tower: str):
+    if _BLOCK_SPECS is None or tower not in _BLOCK_SPECS:
+        return p
+    # the barrier stops loop-invariant code motion from hoisting whole-stack
+    # weight converts/gathers out of the layer scan (all layers live at once)
+    p = jax.lax.optimization_barrier(p)
+    return jax.lax.with_sharding_constraint(p, _BLOCK_SPECS[tower])

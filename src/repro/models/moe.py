@@ -1,0 +1,105 @@
+"""Mixture-of-Experts layer (Mixtral / Granite style, top-k routing).
+
+Compiled-path formulation: capacity-bounded gather → per-expert matmul →
+scatter-add combine. This keeps FLOPs at top_k·capacity_factor × the dense
+FFN cost (no dense-all-experts blowup) while remaining fully static-shaped
+so GSPMD can partition it. Tokens are grouped (``groups`` = number of data
+shards) and capacity is enforced per (group, expert) — the GShard policy.
+Tokens routed beyond an expert's capacity are dropped for that expert
+(contribute only via their other top-k choices), standard for TPU MoE.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+
+
+def init_moe(key: jax.Array, d: int, cfg: MoEConfig, act: str, dtype=jnp.bfloat16) -> dict:
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    e, f = cfg.n_experts, cfg.d_expert
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    p = {
+        "router": (jax.random.normal(kr, (d, e)) * s_in).astype(jnp.float32),
+        "w_up": (jax.random.normal(ku, (e, d, f)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(kd, (e, f, d)) * s_out).astype(dtype),
+    }
+    if act in ("swiglu", "geglu"):
+        p["w_gate"] = (jax.random.normal(kg, (e, d, f)) * s_in).astype(dtype)
+    return p
+
+
+def moe_capacity(tokens_per_group: int, cfg: MoEConfig) -> int:
+    cap = int(math.ceil(tokens_per_group * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
+    return max(8, ((cap + 7) // 8) * 8)  # pad to a multiple of 8
+
+
+def moe_apply(p: dict, x: jax.Array, cfg: MoEConfig, act: str,
+              groups: int = 1) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D). ``groups`` should equal the number of data
+    shards so capacity selection stays shard-local (no global sort)."""
+    b, s, d = x.shape
+    t = b * s
+    assert t % groups == 0, (t, groups)
+    tg = t // groups
+    e, k = cfg.n_experts, cfg.top_k
+    cap = min(moe_capacity(tg, cfg), tg)
+
+    from repro.models import actsharding as AS
+    xt = AS.constrain_tag(x.reshape(groups, tg, d), "moe_tokens")
+    # router matmul in model dtype (casting xt to f32 here makes XLA keep an
+    # f32 copy of the token tensor that the dispatch gather then reads,
+    # promoting every downstream expert tensor — and the weight stack — to
+    # f32); softmax/top-k run in f32 on the small (G,Tg,E) logits.
+    logits = jnp.einsum("gtd,de->gte", xt,
+                        p["router"].astype(xt.dtype)).astype(jnp.float32)
+    # top-k selection, combine weights = softmax over the selected k logits
+    top_logits, top_idx = jax.lax.top_k(logits, k)                  # (G,Tg,k)
+    top_w = jax.nn.softmax(top_logits, axis=-1)                     # (G,Tg,k)
+    # per-(token, expert) combine weight
+    onehot = jax.nn.one_hot(top_idx, e, dtype=jnp.float32)          # (G,Tg,k,E)
+    w_te = jnp.einsum("gtk,gtke->gte", top_w, onehot)               # (G,Tg,E)
+
+    # capacity enforcement: each expert keeps its top-`cap` tokens by weight
+    scores = jnp.swapaxes(w_te, 1, 2)                               # (G,E,Tg)
+    sel_scores, sel_tok = jax.lax.top_k(scores, cap)                # (G,E,cap)
+    keep = sel_scores > 0.0                                         # dropped / padding slots
+
+    # gather tokens: (G,E,cap,D)
+    xg = jnp.take_along_axis(xt[:, None], sel_tok[..., None], axis=2)
+    xg = AS.constrain_tag(xg * keep[..., None].astype(xg.dtype), "moe_out")
+
+    # expert FFN — hidden tensors pinned to (dp, -, -, model)
+    up = AS.constrain_tag(jnp.einsum("gecd,edf->gecf", xg, p["w_up"]),
+                          "moe_hidden")
+    if act in ("swiglu", "geglu"):
+        gate = AS.constrain_tag(jnp.einsum("gecd,edf->gecf", xg, p["w_gate"]),
+                                "moe_hidden")
+        g = jax.nn.silu(gate) if act == "swiglu" else jax.nn.gelu(gate, approximate=True)
+        h = g * up
+    else:
+        h = jnp.square(jax.nn.relu(up))
+    y = jnp.einsum("gecf,efd->gecd", h, p["w_down"])                # (G,E,cap,D)
+    y = AS.constrain_tag(y * (sel_scores * keep)[..., None].astype(y.dtype),
+                         "moe_out")
+
+    # scatter-add back to token order
+    out = jnp.zeros((groups, tg, d), y.dtype)
+    gi = jnp.arange(groups)[:, None, None]
+    out = out.at[gi, sel_tok].add(y)
+    return out.reshape(b, s, d)
+
+
+def moe_aux_loss(p: dict, x: jax.Array, cfg: MoEConfig) -> jax.Array:
+    """Switch-style load-balancing auxiliary loss (used in fine-tune jobs)."""
+    b, s, d = x.shape
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, top_idx = jax.lax.top_k(logits, cfg.top_k)
+    frac_routed = jnp.mean(jax.nn.one_hot(top_idx, cfg.n_experts), axis=(0, 1, 2))
+    frac_prob = jnp.mean(probs, axis=(0, 1))
+    return cfg.n_experts * jnp.sum(frac_routed * frac_prob)

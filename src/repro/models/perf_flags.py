@@ -1,0 +1,43 @@
+"""Opt-in performance features (the §Perf hillclimb knobs).
+
+Baseline (paper-faithful reproduction) keeps every flag off; the optimized
+configuration is recorded separately in EXPERIMENTS.md §Perf. All flags
+preserve numerics (validated against the naive paths in tests).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class PerfFlags:
+    # decode: SWA archs slice the KV cache to the attention window instead
+    # of reading (and masking) the full context — bytes ∝ window, not S.
+    windowed_decode: bool = False
+    # prefill: SWA attention over a gathered diagonal band instead of the
+    # full-causal chunk scan — FLOPs ∝ S·(window+Q) instead of S².
+    banded_swa_prefill: bool = False
+    # train: cross-entropy computed in sequence chunks (caps logits peak)
+    chunked_ce: bool = False
+    # decode: rotating KV buffer of ring_len(cfg) slots for windowed archs —
+    # memory AND footprint ∝ window; shard-local by construction (the
+    # windowed_decode gather variant forced a KV all-gather — refuted).
+    ring_buffer_decode: bool = False
+
+
+_FLAGS = PerfFlags()
+
+
+def get() -> PerfFlags:
+    return _FLAGS
+
+
+def set_flags(**kw) -> PerfFlags:
+    global _FLAGS
+    _FLAGS = replace(_FLAGS, **kw)
+    return _FLAGS
+
+
+def reset() -> None:
+    global _FLAGS
+    _FLAGS = PerfFlags()

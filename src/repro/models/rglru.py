@@ -1,0 +1,101 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    a_t = exp(c * softplus(Λ) * (-r_t))   = a^{c·r_t},  a = sigmoid(Λ)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+The sequence form uses ``jax.lax.associative_scan`` — log-depth, fully
+unrolled HLO (no while loop), so cost probes are exact and GSPMD partitions
+it cleanly. Decode is the single-step recurrence.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+_C = 8.0
+
+
+def init_rglru_block(key: jax.Array, d: int, width: int, conv_width: int,
+                     dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    sw = 1.0 / math.sqrt(width)
+    return {
+        "w_in": (jax.random.normal(ks[0], (d, width)) * s).astype(dtype),
+        "w_gate_in": (jax.random.normal(ks[1], (d, width)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[2], (conv_width, width)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((width,), dtype),
+        "wa": (jax.random.normal(ks[3], (width, width)) * sw).astype(dtype),
+        "wx": (jax.random.normal(ks[4], (width, width)) * sw).astype(dtype),
+        "lambda_p": jnp.full((width,), 2.0, jnp.float32),  # sigmoid ≈ .88 decay
+        "w_out": (jax.random.normal(ks[5], (width, d)) * sw).astype(dtype),
+    }
+
+
+def _rglru_coeffs(p: dict, u: jax.Array):
+    """u: (B,T,W) post-conv activations -> (a, b) with h_t = a h + b."""
+    rg = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", u, p["wa"]).astype(jnp.float32))
+    ig = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", u, p["wx"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lambda_p"]) * rg          # log a_t ≤ 0
+    a = jnp.exp(log_a)
+    gated = ig * u.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+    return a, b
+
+
+def rglru_scan(p: dict, u: jax.Array, h0: jax.Array):
+    """Associative-scan linear recurrence. u: (B,T,W); h0: (B,W)."""
+    a, b = _rglru_coeffs(p, u)
+    # fold h0 into the first step: h_1 = a_1 h0 + b_1
+    b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    av, bv = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return bv, bv[:, -1, :]                                     # h_t for all t; final state
+
+
+def rglru_step(p: dict, u: jax.Array, h: jax.Array):
+    """Single decode step. u: (B,1,W); h: (B,W)."""
+    a, b = _rglru_coeffs(p, u)
+    h = a[:, 0] * h.astype(jnp.float32) + b[:, 0]
+    return h, h
+
+
+def conv1d_apply(p: dict, u: jax.Array, conv_state: jax.Array):
+    """Depthwise causal conv. u: (B,T,W); conv_state: (B,cw-1,W) trailing
+    inputs from the previous call. Returns (y, new_conv_state)."""
+    cw = p["conv_w"].shape[0]
+    full = jnp.concatenate([conv_state.astype(u.dtype), u], axis=1)   # (B,cw-1+T,W)
+    t = u.shape[1]
+    y = jnp.zeros_like(u, dtype=jnp.float32)
+    for i in range(cw):  # static tiny loop (cw = 4)
+        y = y + full[:, i:i + t, :].astype(jnp.float32) * p["conv_w"][i].astype(jnp.float32)
+    y = y + p["conv_b"].astype(jnp.float32)
+    new_state = full[:, -(cw - 1):, :] if cw > 1 else jnp.zeros_like(conv_state)
+    return y.astype(u.dtype), new_state
+
+
+def rglru_block_apply(p: dict, x: jax.Array, h0: jax.Array, conv_state: jax.Array,
+                      decode: bool = False):
+    """Full Griffin recurrent block: (gelu gate) ⊙ (conv → RG-LRU) → out proj.
+    x: (B,T,D). Returns (y, new_h, new_conv_state)."""
+    gate = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, p["w_gate_in"]), approximate=True)
+    u = jnp.einsum("btd,dw->btw", x, p["w_in"])
+    u, conv_state = conv1d_apply(p, u, conv_state)
+    if decode:
+        hseq, h = rglru_step(p, u, h0)
+        hseq = hseq[:, None, :]
+    else:
+        hseq, h = rglru_scan(p, u, h0)
+    y = (hseq.astype(x.dtype) * gate)
+    y = jnp.einsum("btw,wd->btd", y, p["w_out"])
+    return y, h, conv_state

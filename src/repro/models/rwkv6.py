@@ -1,0 +1,186 @@
+"""RWKV-6 "Finch" — attention-free time-mix with data-dependent decay.
+
+Two formulations of the WKV6 recurrence:
+  * ``wkv_sequential`` — the literal per-token recurrence (oracle; also the
+    decode step).
+  * ``wkv_chunked`` — chunk-parallel form: within-chunk pairwise term via
+    masked matmuls in log-decay space, cross-chunk via a state scan. This is
+    the MXU-friendly TPU formulation (the Pallas kernel implements the same
+    schedule per (batch, head) block). ``unroll=True`` removes the chunk
+    while-loop for exact cost probes.
+
+Recurrence (per head, state S ∈ R^{hd×hd}):
+    y_t = r_t · (S_{t-1} + (u ⊙ k_t) v_tᵀ)
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+with per-channel decay w_t = exp(-exp(ŵ_t)) computed from the input
+(data-dependent, the Finch contribution).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+# Clamp on per-token log-decay used inside the within-chunk matmul so the
+# exp(-cumsum) factors stay in fp32 range. exp(-30) underflows anything the
+# pairwise term could contribute, so this is numerically lossless at chunk
+# sizes <= 64 (tested against the sequential oracle).
+LOG_DECAY_CLAMP = -30.0
+
+
+def wkv_sequential(r, k, v, w, u, state=None):
+    """r,k,v,w: (B, T, H, hd); u: (H, hd). Returns (y, final_state).
+    state: (B, H, hd, hd) mapping k-dim × v-dim."""
+    b, t, h, hd = r.shape
+    if state is None:
+        state = jnp.zeros((b, h, hd, hd), jnp.float32)
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs                                   # (B,H,hd)
+        kv = kt[..., :, None] * vt[..., None, :]              # (B,H,hd,hd)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (rf, kf, vf, wf))
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), state
+
+
+def wkv_chunked(r, k, v, w, u, state=None, chunk: int = 64, unroll: bool = False):
+    """Chunk-parallel WKV6. Same signature/semantics as wkv_sequential."""
+    b, t, h, hd = r.shape
+    if state is None:
+        state = jnp.zeros((b, h, hd, hd), jnp.float32)
+    pad = (-t) % chunk
+    if pad:
+        z = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    tt = t + pad
+    n = tt // chunk
+    shape = (b, n, chunk, h, hd)
+    rc, kc, vc, wc = (x.reshape(shape).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+                      for x in (r, k, v, w))                   # (n,B,H,C,hd)
+
+    u32 = u.astype(jnp.float32)
+
+    def body(s, xs):
+        rb, kb, vb, wb = xs                                    # (B,H,C,hd)
+        lw = jnp.clip(jnp.log(jnp.maximum(wb, 1e-38)), LOG_DECAY_CLAMP, 0.0)
+        cum = jnp.cumsum(lw, axis=2)                           # decay from chunk start, inclusive
+        # contribution of the carried-in state: r_i ⊙ Π_{j<=i-1} w_j ... note
+        # state applies decays of steps 1..i-1 plus current-token is excluded
+        dec_in = jnp.exp(cum - lw)                             # Π_{j<i} w_j  (B,H,C,hd)
+        y_state = jnp.einsum("bhck,bhkv->bhcv", rb * dec_in, s)
+        # within-chunk pairwise term, strictly lower-triangular in time
+        q_side = rb * jnp.exp(cum - lw)                        # r_i Π_{j<i} w
+        k_side = kb * jnp.exp(-cum)                            # k_j / Π_{j<=j} w
+        scores = jnp.einsum("bhck,bhdk->bhcd", q_side, k_side)  # (B,H,C,C) c=query d=key
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        scores = jnp.where(mask, scores, 0.0)
+        # current-token bonus term
+        bonus = jnp.einsum("bhck,bhck->bhc", rb * u32[None, :, None, :], kb)
+        y = y_state + jnp.einsum("bhcd,bhdv->bhcv", scores, vb) + bonus[..., None] * vb
+        # state update across the chunk
+        total = cum[:, :, -1:, :]                              # Σ log w over chunk
+        k_dec = kb * jnp.exp(total - cum)                      # k_j Π_{l>j} w_l
+        s = jnp.exp(total[:, :, 0, :])[..., None] * s + jnp.einsum(
+            "bhck,bhcv->bhkv", k_dec, vb)
+        return s, y
+
+    state, ys = jax.lax.scan(body, state, (rc, kc, vc, wc),
+                             unroll=n if unroll else 1)
+    ys = ys.transpose(1, 0, 3, 2, 4).reshape(b, tt, h, hd)[:, :t]
+    return ys.astype(r.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Full RWKV6 block (time-mix + channel-mix) parameters and application
+# ---------------------------------------------------------------------------
+
+LORA_RANK = 32
+
+
+def init_rwkv_block(key: jax.Array, d: int, f: int, head_dim: int, dtype=jnp.bfloat16) -> dict:
+    h = d // head_dim
+    ks = jax.random.split(key, 12)
+    s = 1.0 / math.sqrt(d)
+    lr = LORA_RANK
+    return {
+        # time-mix
+        "mix_base": jnp.full((5, d), 0.5, jnp.float32),  # r,k,v,w,g static lerp
+        "mix_lora_a": (jax.random.normal(ks[0], (d, lr)) * s).astype(dtype),
+        "mix_lora_b": (jax.random.normal(ks[1], (5, lr, d)) * 0.01).astype(dtype),
+        "wr": (jax.random.normal(ks[2], (d, d)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[3], (d, d)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[4], (d, d)) * s).astype(dtype),
+        "wg": (jax.random.normal(ks[5], (d, d)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[6], (d, d)) * s).astype(dtype),
+        "decay_base": jnp.full((d,), -4.0, jnp.float32),
+        "decay_lora_a": (jax.random.normal(ks[7], (d, lr)) * s).astype(dtype),
+        "decay_lora_b": (jax.random.normal(ks[8], (lr, d)) * 0.01).astype(dtype),
+        "bonus_u": jnp.zeros((h, head_dim), jnp.float32),
+        "ln_x": jnp.ones((d,), jnp.float32),  # per-head group-norm scale
+        # channel-mix
+        "cm_mix": jnp.full((2, d), 0.5, jnp.float32),
+        "cm_k": (jax.random.normal(ks[9], (d, f)) * s).astype(dtype),
+        "cm_v": (jax.random.normal(ks[10], (f, d)) * (1.0 / math.sqrt(f))).astype(dtype),
+        "cm_r": (jax.random.normal(ks[11], (d, d)) * s).astype(dtype),
+    }
+
+
+def _token_shift(x, last):
+    """shifted[t] = x[t-1]; position 0 takes `last` (carried across calls)."""
+    shifted = jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+    return shifted
+
+
+def rwkv_time_mix(p: dict, x: jax.Array, head_dim: int, state, last_x,
+                  chunked: bool = True, chunk: int = 64, unroll: bool = False):
+    """x: (B,T,D). state: (B,H,hd,hd). last_x: (B,D) previous token input.
+    Returns (y, new_state, new_last_x)."""
+    b, t, d = x.shape
+    h = d // head_dim
+    xs = _token_shift(x, last_x)
+    delta = (xs - x).astype(jnp.float32)
+    # data-dependent lerp (ddlerp): mix = base + lora(x)
+    lora = jnp.einsum("btd,dr->btr", x, p["mix_lora_a"])
+    mixes = p["mix_base"][:, None, None, :] + jnp.einsum(
+        "btr,mrd->mbtd", jax.nn.tanh(lora.astype(jnp.float32)).astype(x.dtype),
+        p["mix_lora_b"]).astype(jnp.float32)
+    xr, xk, xv, xw, xg = (x.astype(jnp.float32) + delta * mixes[i] for i in range(5))
+    cast = lambda a: a.astype(x.dtype)
+    r = jnp.einsum("btd,de->bte", cast(xr), p["wr"]).reshape(b, t, h, head_dim)
+    k = jnp.einsum("btd,de->bte", cast(xk), p["wk"]).reshape(b, t, h, head_dim)
+    v = jnp.einsum("btd,de->bte", cast(xv), p["wv"]).reshape(b, t, h, head_dim)
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", cast(xg), p["wg"]))
+    dec = p["decay_base"] + jnp.einsum(
+        "btd,dr,re->bte", cast(xw), p["decay_lora_a"], p["decay_lora_b"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(dec)).reshape(b, t, h, head_dim)  # (0,1) per channel
+
+    fn = wkv_chunked if chunked else wkv_sequential
+    if chunked:
+        y, state = fn(r, k, v, w.astype(r.dtype), p["bonus_u"], state, chunk=chunk, unroll=unroll)
+    else:
+        y, state = fn(r, k, v, w.astype(r.dtype), p["bonus_u"], state)
+    # per-head group norm then gate
+    y32 = y.astype(jnp.float32)
+    mu = jnp.mean(y32, axis=-1, keepdims=True)
+    var = jnp.var(y32, axis=-1, keepdims=True)
+    y32 = (y32 - mu) * jax.lax.rsqrt(var + 1e-5)
+    y = (y32.reshape(b, t, d) * p["ln_x"]).astype(x.dtype) * g
+    y = jnp.einsum("btd,de->bte", y, p["wo"])
+    return y, state, x[:, -1, :]
+
+
+def rwkv_channel_mix(p: dict, x: jax.Array, last_x):
+    xs = _token_shift(x, last_x)
+    delta = (xs - x).astype(jnp.float32)
+    xk = (x.astype(jnp.float32) + delta * p["cm_mix"][0]).astype(x.dtype)
+    xr = (x.astype(jnp.float32) + delta * p["cm_mix"][1]).astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(jnp.einsum("btd,df->btf", xk, p["cm_k"])))
+    rr = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["cm_r"]).astype(jnp.float32)).astype(x.dtype)
+    return rr * jnp.einsum("btf,fd->btd", kk, p["cm_v"]), x[:, -1, :]

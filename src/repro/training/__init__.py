@@ -1,0 +1,3 @@
+from repro.training.optimizer import OptimizerConfig, adamw_update, init_opt_state  # noqa: F401
+from repro.training.checkpoint import CheckpointManager  # noqa: F401
+from repro.training.train_loop import TrainConfig, train, make_train_step  # noqa: F401

@@ -1,0 +1,108 @@
+"""Training loop for fine-tune jobs (the TRAINING job kind of §3).
+
+train_step = fwd (remat over layers) → grads → AdamW, optionally with
+gradient (microbatch) accumulation. The same step function is what the
+dry-run lowers onto the production mesh for the train_4k shapes.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_factory import ModelBundle, cross_entropy
+from repro.training.checkpoint import CheckpointManager
+from repro.training.optimizer import OptimizerConfig, adamw_update, init_opt_state
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    microbatches: int = 1
+    remat: bool = True
+    opt: OptimizerConfig = OptimizerConfig()
+
+
+def make_loss_fn(bundle: ModelBundle, remat: bool = True):
+    cfg = bundle.cfg
+
+    def loss_fn(params, tokens, targets, mask, extra):
+        logits = bundle.forward(cfg, params, tokens, attn_impl="auto",
+                                remat=remat, **extra)
+        return cross_entropy(logits, targets, mask, cfg.vocab_size)
+
+    return loss_fn
+
+
+def make_train_step(bundle: ModelBundle, tcfg: TrainConfig):
+    loss_fn = make_loss_fn(bundle, tcfg.remat)
+
+    def train_step(params, opt_state, tokens, targets, mask, extra):
+        if tcfg.microbatches > 1:
+            mb_tok = jnp.reshape(tokens, (tcfg.microbatches, -1) + tokens.shape[1:])
+            mb_tgt = jnp.reshape(targets, (tcfg.microbatches, -1) + targets.shape[1:])
+            mb_msk = jnp.reshape(mask, (tcfg.microbatches, -1) + mask.shape[1:])
+
+            def acc_body(carry, xs):
+                g_acc, l_acc = carry
+                t, y, m = xs
+                l, g = jax.value_and_grad(loss_fn)(params, t, y, m, extra)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+
+            zero_g = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(acc_body, (zero_g, 0.0),
+                                            (mb_tok, mb_tgt, mb_msk))
+            grads = jax.tree.map(lambda g: g / tcfg.microbatches, grads)
+            loss = loss / tcfg.microbatches
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, tokens, targets,
+                                                      mask, extra)
+        params, opt_state, metrics = adamw_update(tcfg.opt, params, grads, opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train(bundle: ModelBundle, params, data_iter, tcfg: TrainConfig,
+          ckpt: Optional[CheckpointManager] = None,
+          resume: bool = False,
+          log: Callable[[str], None] = print) -> Tuple[Any, Dict[str, float]]:
+    opt_state = init_opt_state(params)
+    start_step = 0
+    if ckpt is not None and resume and ckpt.latest_step() is not None:
+        state = ckpt.restore({"params": params, "opt": opt_state})
+        params, opt_state = state["params"], state["opt"]
+        start_step = int(opt_state["step"])
+        log(f"resumed from step {start_step}")
+    step_fn = jax.jit(make_train_step(bundle, tcfg))
+    extra = bundle.extra_inputs(1)
+    history = []
+    t0 = time.monotonic()
+    for step in range(start_step, tcfg.steps):
+        tokens, targets, mask = next(data_iter)
+        ex = {k: jnp.broadcast_to(v, (tokens.shape[0],) + v.shape[1:])
+              for k, v in extra.items()}
+        params, opt_state, metrics = step_fn(params, opt_state,
+                                             jnp.asarray(tokens), jnp.asarray(targets),
+                                             jnp.asarray(mask), ex)
+        history.append(float(metrics["loss"]))
+        if (step + 1) % tcfg.log_every == 0:
+            log(f"step {step+1}: loss={history[-1]:.4f} "
+                f"gnorm={float(metrics['grad_norm']):.3f} "
+                f"lr={float(metrics['lr']):.2e}")
+        if ckpt is not None and (step + 1) % tcfg.ckpt_every == 0:
+            ckpt.save(step + 1, {"params": params, "opt": opt_state},
+                      blocking=False)
+    if ckpt is not None:
+        ckpt.save(tcfg.steps, {"params": params, "opt": opt_state})
+        ckpt.wait()
+    return params, {"loss_first": history[0] if history else float("nan"),
+                    "loss_last": history[-1] if history else float("nan"),
+                    "wall": time.monotonic() - t0}

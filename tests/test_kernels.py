@@ -1,0 +1,104 @@
+"""Per-kernel validation (deliverable c): sweep shapes/dtypes, interpret-
+mode Pallas vs the pure-jnp oracle in ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-4
+
+
+@pytest.mark.parametrize("b,h,hkv,hd,page,npages", [
+    (1, 4, 4, 16, 8, 3),      # MHA
+    (2, 8, 4, 32, 16, 5),     # GQA
+    (3, 8, 1, 64, 16, 4),     # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("softcap,window", [(None, None), (30.0, None), (None, 20)])
+def test_paged_attention(b, h, hkv, hd, page, npages, dtype, softcap, window):
+    ks = jax.random.split(KEY, 4)
+    pool = npages * b + 2
+    q = jax.random.normal(ks[0], (b, h, hd), dtype)
+    kp = jax.random.normal(ks[1], (pool, page, hkv, hd), dtype)
+    vp = jax.random.normal(ks[2], (pool, page, hkv, hd), dtype)
+    bt = jax.random.permutation(ks[3], pool)[: b * npages].reshape(b, npages).astype(jnp.int32)
+    lengths = jnp.asarray(np.random.RandomState(0).randint(1, npages * page, b), jnp.int32)
+    o_p = ops.paged_attention(q, kp, vp, bt, lengths, softcap=softcap,
+                              window=window, impl="pallas")
+    o_r = ops.paged_attention(q, kp, vp, bt, lengths, softcap=softcap,
+                              window=window, impl="ref")
+    np.testing.assert_allclose(np.asarray(o_p, np.float32),
+                               np.asarray(o_r, np.float32), atol=_tol(dtype))
+
+
+@pytest.mark.parametrize("b,s,h,hkv,hd,bq,bk", [
+    (1, 128, 4, 4, 16, 32, 32),
+    (2, 256, 8, 2, 32, 64, 128),
+    (1, 64, 2, 1, 64, 64, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("softcap,window", [(None, None), (50.0, 48)])
+def test_flash_prefill(b, s, h, hkv, hd, bq, bk, dtype, softcap, window):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, hd), dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, hd), dtype)
+    o_p = ops.flash_prefill(q, k, v, softcap=softcap, window=window,
+                            block_q=bq, block_k=bk, impl="pallas")
+    o_r = ops.flash_prefill(q, k, v, softcap=softcap, window=window, impl="ref")
+    np.testing.assert_allclose(np.asarray(o_p, np.float32),
+                               np.asarray(o_r, np.float32), atol=_tol(dtype))
+
+
+@pytest.mark.parametrize("b,t,h,hd,chunk", [(1, 64, 2, 16, 16),
+                                            (2, 128, 3, 32, 32),
+                                            (1, 96, 1, 64, 48)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wkv6(b, t, h, hd, chunk, dtype):
+    ks = jax.random.split(KEY, 5)
+    r = (jax.random.normal(ks[0], (b, t, h, hd)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (b, t, h, hd)) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (b, t, h, hd)) * 0.5).astype(dtype)
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (b, t, h, hd)) * 0.5 - 1.0)).astype(dtype)
+    u = (jax.random.normal(ks[4], (h, hd)) * 0.3).astype(jnp.float32)
+    y_p = ops.wkv6(r, k, v, w, u, chunk=chunk, impl="pallas")
+    y_r = ops.wkv6(r, k, v, w, u, impl="ref")
+    np.testing.assert_allclose(np.asarray(y_p, np.float32),
+                               np.asarray(y_r, np.float32),
+                               atol=3e-2 if dtype == jnp.bfloat16 else 2e-3)
+
+
+@pytest.mark.parametrize("b,t,w,chunk,bw", [(1, 128, 128, 32, 128),
+                                            (2, 256, 256, 64, 128),
+                                            (1, 64, 384, 64, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rglru(b, t, w, chunk, bw, dtype):
+    ks = jax.random.split(KEY, 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (b, t, w))).astype(dtype)
+    bb = (jax.random.normal(ks[1], (b, t, w)) * 0.2).astype(dtype)
+    h0 = (jax.random.normal(ks[2], (b, w)) * 0.5).astype(dtype)
+    y_p = ops.rglru(a, bb, h0, chunk=chunk, block_w=bw, impl="pallas")
+    y_r = ops.rglru(a, bb, h0, impl="ref")
+    np.testing.assert_allclose(np.asarray(y_p, np.float32),
+                               np.asarray(y_r, np.float32),
+                               atol=5e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+def test_wkv_chunked_equals_sequential_models():
+    """models.rwkv6 chunked == sequential (the train/prefill formulation)."""
+    from repro.models.rwkv6 import wkv_chunked, wkv_sequential
+    ks = jax.random.split(KEY, 5)
+    b, t, h, hd = 2, 80, 2, 16
+    r, k, v = (jax.random.normal(ks[i], (b, t, h, hd)) * 0.5 for i in range(3))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (b, t, h, hd)) * 0.5 - 1.0))
+    u = jax.random.normal(ks[4], (h, hd)) * 0.3
+    y1, s1 = wkv_sequential(r, k, v, w, u)
+    y2, s2 = wkv_chunked(r, k, v, w, u, chunk=32)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=2e-4)

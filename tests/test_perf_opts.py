@@ -1,0 +1,44 @@
+"""Beyond-paper perf features must preserve numerics (EXPERIMENTS.md §Perf)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref as KREF
+from repro.models import layers as L
+from repro.models import perf_flags as PF
+
+
+def test_banded_swa_equals_masked():
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    b, s, h, hkv, hd, win = 2, 512, 4, 2, 16, 96
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, hkv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, hkv, hd), jnp.float32)
+    o_band = L.banded_swa_attention(q, k, v, win, q_block=64)
+    o_ref = KREF.flash_prefill_ref(q, k, v, window=win)
+    np.testing.assert_allclose(np.asarray(o_band), np.asarray(o_ref), atol=2e-4)
+
+
+def test_windowed_decode_equals_full():
+    """decode with windowed KV slice == full-cache masked decode."""
+    from repro.models import get_model
+    m = get_model("h2o-danube-3-4b", smoke=True)  # swa, window=16 in smoke
+    cfg = m.cfg
+    params = m.init_params(jax.random.PRNGKey(0), jnp.float32)
+    B, S = 2, 40
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    cache1 = m.init_cache(B, 64, jnp.float32)
+    cache2 = m.init_cache(B, 64, jnp.float32)
+    _, cache1 = m.prefill(cfg, params, tokens[:, :32], cache1)
+    _, cache2 = m.prefill(cfg, params, tokens[:, :32], cache2)
+    try:
+        for t in range(32, S):
+            PF.reset()
+            lg1, cache1 = m.decode_step(cfg, params, tokens[:, t], cache1)
+            PF.set_flags(windowed_decode=True)
+            lg2, cache2 = m.decode_step(cfg, params, tokens[:, t], cache2)
+            np.testing.assert_allclose(np.asarray(lg1, np.float32),
+                                       np.asarray(lg2, np.float32), atol=2e-4)
+    finally:
+        PF.reset()

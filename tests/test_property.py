@@ -1,0 +1,167 @@
+"""Hypothesis property tests on system invariants (deliverable c)."""
+import string
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.engine.kv_cache import OutOfPagesError, pages_needed
+from repro.engine.radix_tree import RadixTree
+from repro.engine.tokenizer import ByteTokenizer
+
+token_seqs = st.lists(st.integers(3, 40), min_size=1, max_size=24)
+
+
+# ---------------------------------------------------------------------------
+# Radix tree vs naive longest-common-prefix model
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(token_seqs, min_size=1, max_size=12), token_seqs)
+def test_radix_matches_naive_lcp(inserted, query):
+    tree = RadixTree()
+    for i, seq in enumerate(inserted):
+        tree.insert(seq, payload=("entry", i))
+    matched, path = tree.match_prefix(query)
+    naive = max((len(_lcp(seq, query)) for seq in inserted), default=0)
+    assert matched == naive
+    if matched > 0:
+        # the reported subtree must contain an entry sharing `matched` tokens
+        payload = None
+        for node in reversed(path):
+            payload = node.payload or tree.any_payload(node)
+            if payload is not None:
+                break
+        assert payload is not None
+        _, idx = payload
+        assert tuple(inserted[idx][:matched]) == tuple(query[:matched])
+
+
+def _lcp(a, b):
+    out = []
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        out.append(x)
+    return out
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(token_seqs, min_size=1, max_size=10))
+def test_radix_insert_then_exact_match(seqs):
+    tree = RadixTree()
+    for i, seq in enumerate(seqs):
+        tree.insert(seq, payload=i)
+    for seq in seqs:
+        matched, _ = tree.match_prefix(seq)
+        assert matched == len(seq)
+
+
+# ---------------------------------------------------------------------------
+# Page allocator invariants
+# ---------------------------------------------------------------------------
+
+
+class _AllocModel:
+    """Reference model: set-based allocator."""
+
+    def __init__(self, n):
+        self.free = set(range(n))
+        self.held = {}
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "free"]),
+                          st.integers(1, 5)), min_size=1, max_size=40))
+def test_pool_allocator_invariants(ops_list):
+    from repro.configs import get_config, smoke_config
+    from repro.engine.kv_cache import PagedKVPool
+    cfg = smoke_config(get_config("qwen3-8b"))
+    pool = PagedKVPool(cfg, n_pages=16, page_size=4)
+    held = []
+    for op, n in ops_list:
+        if op == "alloc":
+            try:
+                pages = pool.alloc(n)
+            except OutOfPagesError:
+                assert pool.free_page_count() < n
+                continue
+            assert len(set(pages)) == n            # no duplicates
+            for run in held:
+                assert not (set(run) & set(pages))  # no double-allocation
+            held.append(pages)
+        elif held:
+            run = held.pop(np.random.RandomState(n).randint(len(held)))
+            pool.release(run)
+    total_held = sum(len(r) for r in held)
+    assert pool.free_page_count() + total_held + len(pool.reclaimable()) \
+        + sum(1 for p, r in pool._refs.items() if r.ref_count > 0 and p not in
+              [x for run in held for x in run]) >= 16 - total_held
+    assert pool.free_page_count() == 16 - total_held
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 200), st.integers(1, 32))
+def test_pages_needed(tokens, page):
+    n = pages_needed(tokens, page)
+    assert n * page >= tokens
+    assert (n - 1) * page < tokens
+
+
+# ---------------------------------------------------------------------------
+# Tokenizer roundtrip
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=150, deadline=None)
+@given(st.text(alphabet=string.printable, max_size=200))
+def test_tokenizer_roundtrip(text):
+    tok = ByteTokenizer()
+    assert tok.decode(tok.encode(text)) == text
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 6), st.integers(8, 32))
+def test_packing_shapes_and_sharding(batch, seq):
+    from repro.data import DataConfig, PackedDataset
+    full = PackedDataset(DataConfig(seq_len=seq, batch_size=batch, n_docs=64))
+    tokens, targets, mask = next(full.batches())
+    assert tokens.shape == (batch, seq) == targets.shape == mask.shape
+    # next-token alignment
+    assert (tokens[:, 1:] == targets[:, :-1]).all()
+    # DP sharding partitions the docs: shards are disjoint subsets
+    s0 = PackedDataset(DataConfig(seq_len=seq, batch_size=1, n_docs=64,
+                                  dp_rank=0, dp_size=2))
+    s1 = PackedDataset(DataConfig(seq_len=seq, batch_size=1, n_docs=64,
+                                  dp_rank=1, dp_size=2))
+    assert len(s0.windows) + len(s1.windows) <= len(full.windows) + 2
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: chunked prefill never exceeds the token budget
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(2, 60), min_size=1, max_size=6),
+       st.integers(8, 64), st.integers(4, 16))
+def test_chunked_prefill_budget(prompt_lens, budget, chunk):
+    from repro.engine.model_runner import SequenceState
+    from repro.engine.scheduler import Scheduler, SchedulerConfig
+    sched = Scheduler(SchedulerConfig(max_batch_tokens=budget,
+                                      chunk_size=chunk), rtc=None, paged=True)
+    for i, n in enumerate(prompt_lens):
+        sched.admit(SequenceState(f"s{i}", list(range(n)), n))
+    sched.resolve_prefix()
+    plan = sched.prepare_next()
+    total = len(plan.decode) + sum(len(c) for _, _, c in plan.prefill)
+    assert total <= budget
+    for seq, start, c in plan.prefill:
+        assert len(c) <= chunk
+        assert start == seq.n_cached

@@ -1,0 +1,105 @@
+"""Fast scaling (§6): pipeline steps, pre-warm, DRAM cache, NPU-fork,
+autoscaler and fault recovery."""
+import numpy as np
+import pytest
+
+from repro.core import (AutoscalerConfig, ClusterManager, DRAMPageCache,
+                        FastScaler, ModelAsset, ModelLoader, ScaleTimings)
+from repro.core.cluster import TaskExecutor
+from repro.engine.distflow import DistFlow
+
+ASSET_70B = ModelAsset("llama3-70b", n_bytes=140e9, tp=8)
+ASSET_8B = ModelAsset("llama3-8b", n_bytes=16e9, tp=1)
+
+
+def test_scaling_optimized_much_faster():
+    scaler = FastScaler(DRAMPageCache())
+    scaler.dram.preload(ASSET_70B)
+    cold = scaler.scale_one(ASSET_70B, optimized=False)
+    warm = scaler.scale_one(ASSET_70B, optimized=True)
+    assert warm.total < cold.total / 5
+    # pre-warm removes Scaler-Pre and TE-Pre-Load from the critical path
+    assert warm.steps["scaler_pre"] < 1.0
+    assert warm.steps["te_pre_load"] < 1.0
+
+
+def test_dram_hit_vs_miss():
+    dram = DRAMPageCache()
+    loader = ModelLoader(dram)
+    miss = loader.local_load(ASSET_8B)
+    assert miss.path == "dram_miss"
+    hit = loader.local_load(ASSET_8B)     # preloaded by the miss
+    assert hit.path == "dram_hit"
+    assert hit.seconds < miss.seconds
+    assert hit.seconds >= loader.theoretical(ASSET_8B)  # fig 10: above PCIe bound
+
+
+def test_pcie_contention_with_tp():
+    loader = ModelLoader(DRAMPageCache())
+    loader.dram.preload(ASSET_8B)
+    solo = loader.local_load(ASSET_8B, n_parallel_tes=1)
+    shared = loader.local_load(ASSET_8B, n_parallel_tes=8)
+    assert shared.seconds > solo.seconds * 4
+
+
+def test_npu_fork_ici_faster_than_dcn():
+    loader = ModelLoader(DRAMPageCache())
+    src = DistFlow("te-src")
+    dsts = [DistFlow(f"te-{i}") for i in range(4)]
+    src.link_cluster(dsts)
+    ici = loader.npu_fork(ASSET_8B, src, dsts, link="ici")
+    dcn = loader.npu_fork(ASSET_8B, src, dsts, link="dcn")
+    assert ici.seconds < dcn.seconds
+
+
+def test_npu_fork_scales_sublinearly():
+    """Fig 11a: forking to 32 TEs costs much less than 32x one fork."""
+    loader = ModelLoader(DRAMPageCache())
+    src = DistFlow("src")
+    one = loader.npu_fork(ASSET_8B, src, [DistFlow("t0")], link="ici")
+    many = loader.npu_fork(ASSET_8B, src,
+                           [DistFlow(f"t{i}") for i in range(32)], link="ici")
+    assert many.seconds < one.seconds * 4
+
+
+def test_npu_fork_contention_is_limited():
+    """Fig 11b/c: dedicated transfer cores keep interference small."""
+    loader = ModelLoader(DRAMPageCache())
+    src = DistFlow("src")
+    idle = loader.npu_fork(ASSET_8B, src, [DistFlow("a")], source_busy_frac=0.0)
+    busy = loader.npu_fork(ASSET_8B, src, [DistFlow("b")], source_busy_frac=1.0)
+    assert busy.seconds < idle.seconds * 1.3
+
+
+def test_autoscaler_up_down_and_cooldown():
+    scaler = FastScaler(DRAMPageCache(), n_prewarm_pods=8, n_prewarm_tes=8)
+    cm = ClusterManager(scaler, ASSET_8B,
+                        AutoscalerConfig(cooldown_s=100.0, max_tes=8))
+    cm.register_te(TaskExecutor("te-0", "colocated"))
+    d1 = cm.autoscale(load=0.95, slo_violations=0.0, now=1000.0)
+    assert d1 > 0
+    # cooldown blocks immediate re-scale
+    assert cm.autoscale(load=0.95, slo_violations=0.0, now=1001.0) == 0
+    # scale down on low load after cooldown
+    d3 = cm.autoscale(load=0.05, slo_violations=0.0, now=2000.0)
+    assert d3 == -1
+
+
+def test_fault_recovery_reboots_te():
+    scaler = FastScaler(DRAMPageCache())
+    cm = ClusterManager(scaler, ASSET_8B, heartbeat_timeout=0.0)
+    te = TaskExecutor("te-0", "colocated")
+    te.fail()
+    cm.register_te(te)
+    rebooted = cm.check_health()
+    assert rebooted == ["te-0"]
+    assert te.healthy
+
+
+def test_dram_cache_eviction():
+    dram = DRAMPageCache(capacity_bytes=40e9)
+    assert dram.preload(ASSET_8B)
+    big = ModelAsset("m2", n_bytes=30e9)
+    assert dram.preload(big)
+    assert not dram.hit(ASSET_8B.name)   # evicted to fit
+    assert dram.hit("m2")

@@ -1,0 +1,92 @@
+"""Distributed scheduling (§5, Algorithm 1) + heatmap + predictor tests."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (DecodeLengthPredictor, DistributedScheduler,
+                        GlobalPromptTree, PredictorConfig, SchedRequest,
+                        TEHandle, round_robin_scheduler, synth_trace,
+                        train_predictor)
+from repro.core.heatmap import HeatmapStudy, lookup
+
+
+@pytest.fixture(scope="module")
+def heat():
+    return HeatmapStudy(get_config("qwen3-8b"))
+
+
+def _tes():
+    return [TEHandle("c0", "colocated"), TEHandle("c1", "colocated"),
+            TEHandle("p0", "pd_pair"), TEHandle("p1", "pd_pair")]
+
+
+def test_heatmap_directions(heat):
+    g = heat.combined()
+    # long prefill, short decode => PD-disaggregated wins (positive)
+    assert lookup(g, heat.prefill_lens, heat.decode_ratios, 8192, 400) > 0
+    # the paper: disagg advantage (dark red) is larger than colo advantage
+    assert g.max() > -g.min()
+
+
+def test_heatmap_stability(heat):
+    # paper: >80% of cells keep a consistent sign across RPS values
+    assert heat.stability() >= 0.8
+
+
+def test_pd_aware_selects_type(heat):
+    ds = DistributedScheduler(_tes(), heat.combined(), heat.prefill_lens,
+                              heat.decode_ratios)
+    long_prefill = SchedRequest(tokens=list(range(8192)), predicted_decode=256)
+    sub = ds.pd_aware(long_prefill, list(ds.tes.values()))
+    assert {t.te_type for t in sub} == {"pd_pair"}
+
+
+def test_locality_prefers_prefix_holder(heat):
+    tes = _tes()
+    ds = DistributedScheduler(tes, heat.combined(), heat.prefill_lens,
+                              heat.decode_ratios)
+    prompt = list(range(100, 164))
+    ds.commit(SchedRequest(tokens=prompt), tes[1])          # c1 holds prefix
+    req = SchedRequest(tokens=prompt + [7, 8, 9])
+    chosen = ds.locality_aware(req, [tes[0], tes[1]])
+    assert chosen.te_id == "c1"
+
+
+def test_load_aware_fallback_when_unbalanced(heat):
+    tes = _tes()
+    ds = DistributedScheduler(tes, heat.combined(), heat.prefill_lens,
+                              heat.decode_ratios)
+    tes[0].load = 1000.0
+    tes[1].load = 10.0
+    req = SchedRequest(tokens=list(range(50)))
+    # group is unbalanced: dist_sched must go load-aware
+    chosen = ds.dist_sched(req)
+    assert chosen.load <= min(t.load for t in ds.tes.values()) + 1e-9
+
+
+def test_round_robin_cycles(heat):
+    tes = _tes()
+    rr = round_robin_scheduler(tes)
+    picks = [rr(SchedRequest(tokens=[1])).te_id for _ in range(8)]
+    assert picks[:4] == [t.te_id for t in tes]
+    assert picks[4:] == picks[:4]
+
+
+def test_global_prompt_tree_longest_match():
+    gt = GlobalPromptTree()
+    gt.record([1, 2, 3, 4], "a")
+    gt.record([1, 2, 9, 9, 9], "b")
+    best, n = gt.best_te([1, 2, 3, 4, 5], [TEHandle("a", "colocated"),
+                                           TEHandle("b", "colocated")])
+    assert best == "a" and n == 4
+
+
+def test_predictor_accuracy_target():
+    """§5.3.3: paper reports 84.9%; our synthetic-trace target is >= 0.8."""
+    cfg = PredictorConfig(steps=250)
+    xs, ys, _ = synth_trace(3000, cfg)
+    params, acc = train_predictor(cfg, xs, ys)
+    assert acc >= 0.80, acc
+    pred = DecodeLengthPredictor(cfg, params)
+    b = pred.predict_bucket(np.asarray([123, 125, 40, 41] * 30))
+    assert 0 <= b < cfg.n_buckets

@@ -1,0 +1,242 @@
+"""End-to-end system tests: the FLOWSERVE engine against a pure decode
+oracle, PD-disaggregated migration, RTC prefix caching + tiering, and the
+JE/cluster-manager wiring (deliverable c, integration level)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.engine import EngineConfig, FlowServe, Request, SamplingParams
+from repro.engine.distflow import BufferInfo
+from repro.models import get_model
+
+SP = SamplingParams(temperature=0.0, max_new_tokens=6, stop_on_eos=False)
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    bundle = get_model("qwen3-8b", smoke=True)
+    params = bundle.init_params(jax.random.PRNGKey(0), jnp.float32)
+    return bundle, params
+
+
+def _oracle(bundle, params, prompt, n_new):
+    cfg = bundle.cfg
+    cache = bundle.init_cache(1, 128, jnp.float32)
+    extra = bundle.extra_inputs(1, jnp.float32)
+    if len(prompt) > 1:
+        _, cache = bundle.prefill(cfg, params,
+                                  jnp.asarray([prompt[:-1]], jnp.int32),
+                                  cache, **extra)
+    out, cur = [], prompt[-1]
+    for _ in range(n_new):
+        lg, cache = bundle.decode_step(cfg, params,
+                                       jnp.asarray([cur], jnp.int32), cache)
+        lg = jnp.where(jnp.arange(lg.shape[-1])[None] >= cfg.vocab_size,
+                       -1e30, lg.astype(jnp.float32))
+        cur = int(jnp.argmax(lg[0]))
+        out.append(cur)
+    return out
+
+
+def _prompts(n, length=11, seed0=0):
+    return [[1] + [int(x) for x in
+                   np.random.RandomState(seed0 + i).randint(3, 200, length)]
+            for i in range(n)]
+
+
+def _engine(bundle, params, mode="colocated", **kw):
+    ecfg = EngineConfig(mode=mode, n_pages=64, page_size=8, n_slots=4,
+                        max_len=96, max_batch_tokens=32, chunk_size=8,
+                        max_decode_batch=4, **kw)
+    return FlowServe(bundle, params, ecfg, name=f"te-{mode}")
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "mixtral-8x7b", "rwkv6-1.6b",
+                                  "recurrentgemma-2b", "seamless-m4t-large-v2"])
+def test_engine_matches_oracle(arch):
+    bundle = get_model(arch, smoke=True)
+    params = bundle.init_params(jax.random.PRNGKey(0), jnp.float32)
+    eng = _engine(bundle, params)
+    prompts = _prompts(3)
+    ids = [eng.add_request(Request(prompt_tokens=p, sampling=SP)) for p in prompts]
+    comps = {c.req_id: c for c in eng.run_to_completion()}
+    assert len(comps) == 3
+    for p, rid in zip(prompts, ids):
+        assert comps[rid].tokens == _oracle(bundle, params, p, 6), arch
+
+
+def test_prefix_cache_hit_and_reuse(qwen):
+    bundle, params = qwen
+    eng = _engine(bundle, params)
+    p = _prompts(1, length=20)[0]
+    eng.add_request(Request(prompt_tokens=p, sampling=SP))
+    eng.run_to_completion()
+    rid2 = eng.add_request(Request(prompt_tokens=p, sampling=SP))
+    comps = {c.req_id: c for c in eng.run_to_completion()}
+    st = eng.prefix_cache_stats()
+    assert st["hits"] >= 1 and st["tokens_reused"] >= 8
+    assert comps[rid2].tokens == _oracle(bundle, params, p, 6)
+
+
+def test_rtc_dram_tier_populate(qwen):
+    bundle, params = qwen
+    eng = _engine(bundle, params)
+    p = _prompts(1, length=30)[0]
+    eng.add_request(Request(prompt_tokens=p, sampling=SP))
+    eng.run_to_completion()
+    # swap the preserved prefix to DRAM; a repeat request must populate it
+    leaves = eng.rtc.tree.leaves_by_lru()
+    assert leaves
+    entry = leaves[0].payload
+    eng.rtc.copy_to_dram(entry)
+    assert entry.location == "dram"
+    # tiny smoke models recompute faster than any fetch — force the cost
+    # model toward fetch so the populate path is exercised
+    eng.rtc.cost.flops_per_token = 1e12
+    rid = eng.add_request(Request(prompt_tokens=p, sampling=SP))
+    comps = {c.req_id: c for c in eng.run_to_completion()}
+    assert comps[rid].tokens == _oracle(bundle, params, p, 6)
+    assert eng.rtc.stats["populates"] >= 1
+
+
+def test_preemption_under_page_pressure(qwen):
+    bundle, params = qwen
+    sp = SamplingParams(temperature=0.0, max_new_tokens=40, stop_on_eos=False)
+    prompts = _prompts(4, length=16)
+    eng = FlowServe(bundle, params,
+                    EngineConfig(mode="colocated", n_pages=14, page_size=8,
+                                 max_batch_tokens=32, chunk_size=8,
+                                 max_decode_batch=4,
+                                 enable_prefix_cache=False))
+    ids = [eng.add_request(Request(prompt_tokens=p, sampling=sp)) for p in prompts]
+    comps = {c.req_id: c for c in eng.run_to_completion(max_steps=20000)}
+    assert len(comps) == 4          # everything completes despite preemption
+    for p, rid in zip(prompts, ids):
+        assert comps[rid].tokens == _oracle(bundle, params, p, 40)
+
+
+def test_pd_disaggregated_equals_oracle(qwen):
+    bundle, params = qwen
+    prompts = _prompts(3, length=14)
+    pe = _engine(bundle, params, mode="prefill")
+    de = _engine(bundle, params, mode="decode")
+    pe.distflow.link_cluster([de.distflow])
+    for p in prompts:
+        pe.add_request(Request(prompt_tokens=p, sampling=SP))
+    comps = {}
+    for _ in range(5000):
+        if not (pe.has_work() or de.has_work()) and not pe._prefill_done_buffer:
+            break
+        pe.step()
+        for rid in pe.pop_migratable():
+            payload = pe.export_kv(rid)
+            pe.distflow.transfer(
+                BufferInfo(owner=pe.name, tier="npu", payload=payload),
+                BufferInfo(owner=de.name, tier="npu",
+                           deliver=lambda pl: de.import_request(pl)))
+            pe.release_request(rid, keep_prefix=False)
+        for c in de.step():
+            comps[c.req_id] = c
+    assert len(comps) == 3
+    for i, p in enumerate(prompts):
+        match = [c for c in comps.values()
+                 if c.n_prompt == len(p)
+                 and c.tokens == _oracle(bundle, params, p, 6)]
+        assert match, f"prompt {i} has no matching completion"
+    assert pe.distflow.bytes_moved() > 0
+
+
+def test_async_vs_sync_same_output(qwen):
+    bundle, params = qwen
+    prompts = _prompts(4)
+    outs = []
+    for async_sched in (False, True):
+        eng = _engine(bundle, params, async_sched=async_sched)
+        ids = [eng.add_request(Request(prompt_tokens=p, sampling=SP))
+               for p in prompts]
+        comps = {c.req_id: c for c in eng.run_to_completion()}
+        outs.append([comps[r].tokens for r in ids])
+    assert outs[0] == outs[1]
+
+
+def test_je_cluster_wiring(qwen):
+    """Request → JE decompose → TE dispatch → completions (§3 wiring)."""
+    bundle, params = qwen
+    from repro.configs import get_config
+    from repro.core import (DistributedScheduler, RequestType, TEHandle,
+                            UserRequest)
+    from repro.core.cluster import JobExecutor
+    from repro.core.heatmap import HeatmapStudy
+    hs = HeatmapStudy(get_config("qwen3-8b"))
+    te0 = TEHandle("te-0", "colocated", engine=_engine(bundle, params))
+    te1 = TEHandle("te-1", "colocated", engine=_engine(bundle, params))
+    ds = DistributedScheduler([te0, te1], hs.combined(), hs.prefill_lens,
+                              hs.decode_ratios)
+    dispatched = []
+
+    def dispatch(task, te):
+        dispatched.append((task.kind.value, te.te_id))
+        te.engine.add_request(Request(prompt_tokens=task.payload["tokens"],
+                                      sampling=SP))
+
+    je = JobExecutor("je-0", ds, dispatch)
+    for p in _prompts(4):
+        je.handle(UserRequest(RequestType.CHAT, {"tokens": p}))
+    total = sum(len(te.engine.run_to_completion()) for te in (te0, te1))
+    assert total == 4
+    assert len(dispatched) == 4
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    import os
+    from repro.training import CheckpointManager
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.bfloat16),
+                  "step": jnp.asarray(7, jnp.int32)}}
+    cm = CheckpointManager(str(tmp_path), n_shards=2, keep=2)
+    cm.save(1, tree)
+    cm.save(2, jax.tree.map(lambda a: a * 2 if a.dtype != jnp.int32 else a, tree),
+            blocking=False)
+    cm.wait()
+    assert cm.list_steps() == [1, 2]
+    restored = cm.restore(tree)                 # latest = step 2
+    np.testing.assert_allclose(np.asarray(restored["a"]),
+                               np.asarray(tree["a"]) * 2)
+    r1 = cm.restore(tree, step=1)
+    np.testing.assert_allclose(np.asarray(r1["a"]), np.asarray(tree["a"]))
+    # gc keeps only the last `keep`
+    cm.save(3, tree)
+    assert cm.list_steps() == [2, 3]
+
+
+def test_train_resume_equivalence(tmp_path):
+    """Fault tolerance: crash after step N + resume == uninterrupted run."""
+    from repro.data import DataConfig, PackedDataset
+    from repro.training import (CheckpointManager, OptimizerConfig,
+                                TrainConfig, train)
+    bundle = get_model("h2o-danube-3-4b", smoke=True)
+    params0 = bundle.init_params(jax.random.PRNGKey(0), jnp.float32)
+    dcfg = DataConfig(seq_len=16, batch_size=2, n_docs=64)
+    opt = OptimizerConfig(lr=1e-3, warmup_steps=2, total_steps=8)
+
+    def data():
+        return PackedDataset(dcfg).batches(epochs=100)
+
+    tc_full = TrainConfig(steps=8, log_every=100, ckpt_every=100, opt=opt)
+    p_full, _ = train(bundle, params0, data(), tc_full, log=lambda s: None)
+
+    ck = CheckpointManager(str(tmp_path))
+    tc_half = TrainConfig(steps=4, log_every=100, ckpt_every=4, opt=opt)
+    train(bundle, params0, data(), tc_half, ckpt=ck, log=lambda s: None)
+    # "crash": restart from the checkpoint; the pipeline is deterministic,
+    # so skip the first 4 batches the same way the first half consumed them
+    it = data()
+    for _ in range(4):
+        next(it)
+    tc_rest = TrainConfig(steps=8, log_every=100, ckpt_every=100, opt=opt)
+    p_res, _ = train(bundle, params0, it, tc_rest, ckpt=ck, resume=True,
+                     log=lambda s: None)
+    for a, b in zip(jax.tree.leaves(p_full), jax.tree.leaves(p_res)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-5)

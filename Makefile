@@ -1,0 +1,23 @@
+# CI / developer entry points. XLA_FLAGS forces 8 simulated host devices so
+# the SPMD tensor-parallel engine tests can build real 1xTP meshes on CPU
+# (tests/conftest.py also sets this, so plain `pytest` behaves the same).
+
+PYTEST   := PYTHONPATH=src python -m pytest
+XLA_HOST := XLA_FLAGS="--xla_force_host_platform_device_count=8"
+
+.PHONY: tier1 fast bench-tp bench help
+
+tier1:  ## full tier-1 suite (ROADMAP.md verify command) on 8 simulated devices
+	$(XLA_HOST) $(PYTEST) -x -q
+
+fast:  ## fast subset: skips tests marked @pytest.mark.slow
+	$(XLA_HOST) $(PYTEST) -x -q -m "not slow"
+
+bench-tp:  ## tok/s for TP in {1,2,4} on simulated devices + sampler dispatches
+	PYTHONPATH=src python benchmarks/bench_tp_engine.py
+
+bench:  ## full paper-figure benchmark harness (XLA_HOST so tp_engine gets devices)
+	$(XLA_HOST) PYTHONPATH=src python -m benchmarks.run
+
+help:
+	@grep -E '^[a-z0-9-]+:.*##' $(MAKEFILE_LIST) | sed 's/:.*## /\t/'

@@ -1,0 +1,115 @@
+"""SPMD tensor-parallel engine benchmark: serve a fixed request batch on a
+qwen3 smoke TE at TP ∈ {1,2,4} over simulated host devices and report tok/s,
+plus sampler-dispatch accounting — batched sampling costs ONE device
+dispatch per decode step where the old per-sequence loop cost B.
+
+    PYTHONPATH=src python benchmarks/bench_tp_engine.py [--arch qwen3-8b]
+        [--tp 1,2,4] [--requests 8] [--max-new 32]
+
+Also exposes run() -> CSV rows for benchmarks/run.py (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import os
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = \
+        (_flags + " --xla_force_host_platform_device_count=8").strip()
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine import EngineConfig, FlowServe, Request, SamplingParams
+from repro.models import get_model
+
+
+def _prompts(n: int, length: int, seed0: int) -> list:
+    return [[1] + [int(x) for x in
+                   np.random.RandomState(seed0 + i).randint(3, 200, length)]
+            for i in range(n)]
+
+
+def _serve(te: FlowServe, prompts: list, max_new: int) -> int:
+    sp = SamplingParams(temperature=0.0, max_new_tokens=max_new,
+                        stop_on_eos=False)
+    for p in prompts:
+        te.add_request(Request(prompt_tokens=p, sampling=sp))
+    comps = te.run_to_completion()
+    return sum(len(c.tokens) for c in comps)
+
+
+def bench_tp(arch: str, tp: int, n_requests: int, max_new: int) -> dict:
+    bundle = get_model(arch, smoke=True)
+    params = bundle.init_params(jax.random.PRNGKey(0), jnp.float32)
+    # prefix cache off: the timed pass must redo full prefills, not RTC hits
+    ecfg = EngineConfig(tp=tp, n_pages=256, page_size=8, max_batch_tokens=64,
+                        chunk_size=16, max_decode_batch=8,
+                        enable_prefix_cache=False)
+    te = FlowServe(bundle, params, ecfg)
+    _serve(te, _prompts(n_requests, 23, seed0=0), max_new)     # compile warmup
+    steps0, disp0 = te.decode_steps, te.sampler_dispatches
+    t0 = time.monotonic()
+    n_tokens = _serve(te, _prompts(n_requests, 23, seed0=100), max_new)
+    dt = time.monotonic() - t0
+    steps = te.decode_steps - steps0
+    return {"tp": tp, "tok_s": n_tokens / dt, "wall_s": dt,
+            "decode_steps": steps,
+            "sampler_dispatches": te.sampler_dispatches - disp0,
+            "per_seq_dispatches_would_be": n_tokens}
+
+
+def run() -> list:
+    """CSV rows for benchmarks/run.py: (name, value, derived)."""
+    rows = []
+    tps = []
+    for tp in (1, 2, 4):
+        if tp <= jax.device_count():
+            tps.append(tp)
+        else:
+            # jax was initialized before this module could force host devices
+            # (e.g. another harness module imported first) — say so instead of
+            # silently dropping the TP comparison.
+            rows.append((f"tp_engine_tp{tp}_SKIPPED", 0.0,
+                         f"only {jax.device_count()} devices; run via "
+                         "`make bench` or set XLA_FLAGS"))
+    for tp in tps:
+        r = bench_tp("qwen3-8b", tp, n_requests=8, max_new=32)
+        rows.append((f"tp_engine_tp{tp}_tok_s", r["tok_s"],
+                     f"dispatches/step="
+                     f"{r['sampler_dispatches'] / max(r['decode_steps'], 1):.2f}"
+                     f" (per-seq loop would be "
+                     f"{r['per_seq_dispatches_would_be'] / max(r['decode_steps'], 1):.1f})"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--tp", default="1,2,4")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=32)
+    args = ap.parse_args()
+
+    print(f"devices={jax.device_count()} arch={args.arch}-smoke "
+          f"requests={args.requests} max_new={args.max_new}")
+    print(f"{'tp':>4} {'tok/s':>10} {'wall_s':>8} {'decode_steps':>13} "
+          f"{'sampler_disp':>13} {'disp/step':>10} {'per-seq would be':>17}")
+    for tp_s in args.tp.split(","):
+        tp = int(tp_s)
+        if tp > jax.device_count():
+            print(f"{tp:>4} skipped: only {jax.device_count()} devices")
+            continue
+        r = bench_tp(args.arch, tp, args.requests, args.max_new)
+        print(f"{r['tp']:>4} {r['tok_s']:>10.1f} {r['wall_s']:>8.2f} "
+              f"{r['decode_steps']:>13} {r['sampler_dispatches']:>13} "
+              f"{r['sampler_dispatches'] / max(r['decode_steps'], 1):>10.2f} "
+              f"{r['per_seq_dispatches_would_be'] / max(r['decode_steps'], 1):>17.1f}")
+
+
+if __name__ == "__main__":
+    main()

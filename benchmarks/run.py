@@ -21,6 +21,7 @@ MODULES = [
     ("fig10", "benchmarks.bench_fig10_teload"),
     ("fig11", "benchmarks.bench_fig11_npufork"),
     ("roofline", "benchmarks.bench_roofline"),
+    ("tp_engine", "benchmarks.bench_tp_engine"),
 ]
 
 

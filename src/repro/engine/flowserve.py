@@ -2,10 +2,11 @@
 
 Master–executor architecture: the master (this class) runs the scheduler,
 RTC index, and DistFlow decisions; the executor side is the model runner
-(+ page pools), which on real hardware is the SPMD program spanning the
-TE's NPUs. Modes mirror §4.5: "colocated" (chunked-prefill + decode in one
-engine), "prefill" (P-only TE) and "decode" (D-only TE) for
-PD-disaggregated groups.
+(+ page pools), which with ``EngineConfig.tp > 1`` IS an SPMD program
+spanning the TE's NPUs — a 1×tp ("data","model") mesh with weights, paged
+KV pools and slot caches sharded per launch/sharding.py (DESIGN.md §5).
+Modes mirror §4.5: "colocated" (chunked-prefill + decode in one engine),
+"prefill" (P-only TE) and "decode" (D-only TE) for PD-disaggregated groups.
 """
 from __future__ import annotations
 
@@ -24,7 +25,7 @@ from repro.engine.kv_cache import OutOfPagesError, PagedKVPool, pages_needed
 from repro.engine.model_runner import (PagedRunner, SequenceState, SlotRunner,
                                        pick_runner)
 from repro.engine.rtc import RelationalTensorCache, RTCCostModel
-from repro.engine.sampling import SamplingParams, sample
+from repro.engine.sampling import SamplingParams, sample_batch
 from repro.engine.scheduler import Scheduler, SchedulerConfig
 from repro.engine.tokenizer import EOS_ID, ByteTokenizer
 from repro.models.model_factory import ModelBundle
@@ -68,6 +69,7 @@ class Completion:
 @dataclass
 class EngineConfig:
     mode: str = "colocated"             # colocated | prefill | decode
+    tp: int = 1                         # model-axis width of the TE's mesh
     n_pages: int = 256
     page_size: int = 16
     n_slots: int = 8                    # SlotRunner slots
@@ -93,19 +95,31 @@ class FlowServe:
         self.distflow = DistFlow(owner=name)
         self._key = jax.random.PRNGKey(ecfg.seed)
 
+        # SPMD executor mesh: the TE's NPUs form a pure TP group (tp=1 keeps
+        # the legacy single-device path; DP happens across TEs via the JE).
+        self.mesh = None
+        if ecfg.tp > 1:
+            from repro.launch.mesh import make_engine_mesh
+            self.mesh = make_engine_mesh(ecfg.tp)
+
         if self.runner_kind == "paged":
+            kv_sharding = None
+            if self.mesh is not None:
+                from repro.launch.sharding import engine_kv_pool_sharding
+                kv_sharding = engine_kv_pool_sharding(self.cfg, self.mesh)
             self.pool = PagedKVPool(self.cfg, ecfg.n_pages, ecfg.page_size,
-                                    ecfg.dtype)
+                                    ecfg.dtype, sharding=kv_sharding)
             cm = RTCCostModel(flops_per_token=2.0 * self.cfg.active_param_count())
             self.rtc = RelationalTensorCache(self.pool, cm) \
                 if ecfg.enable_prefix_cache else None
-            self.runner = PagedRunner(bundle, params, self.pool, ecfg.dtype)
+            self.runner = PagedRunner(bundle, params, self.pool, ecfg.dtype,
+                                      mesh=self.mesh)
         else:
             self.pool = None
             self.rtc = RelationalTensorCache.__new__(RelationalTensorCache)  # placeholder
             self.rtc = None
             self.runner = SlotRunner(bundle, params, ecfg.n_slots, ecfg.max_len,
-                                     ecfg.dtype)
+                                     ecfg.dtype, mesh=self.mesh)
             self._state_cache: Dict[tuple, Any] = {} if ecfg.enable_prefix_cache else None
 
         scfg = SchedulerConfig(max_batch_tokens=ecfg.max_batch_tokens,
@@ -119,6 +133,8 @@ class FlowServe:
         self._prefill_done_buffer: List[str] = []  # P-mode: ready to migrate
         self.steps = 0
         self.step_wall = 0.0
+        self.decode_steps = 0            # steps that executed a decode batch
+        self.sampler_dispatches = 0      # device dispatches spent sampling
         self.sample_params: Dict[str, SamplingParams] = {}
 
     # ---------------------------------------------------------------- API
@@ -193,6 +209,7 @@ class FlowServe:
                 live = [s for s in live if s in self.scheduler.running]
             if live:
                 logits = self.runner.decode(live)
+                self.decode_steps += 1
                 # async scheduling: the next plan depends only on counts —
                 # prepare it *before* sampling commits token values (§4.2)
                 if self.ecfg.async_sched:
@@ -318,15 +335,22 @@ class FlowServe:
             self._prefill_done_buffer.append(seq.seq_id)
             self._ttft[seq.seq_id] = time.monotonic() - self._requests[seq.seq_id].arrival
 
-    def _commit_tokens(self, seqs: List[SequenceState], logits,
-                       first: bool = False) -> List[Completion]:
+    def _commit_tokens(self, seqs: List[SequenceState], logits
+                       ) -> List[Completion]:
+        """Sample the whole decode batch in ONE vmapped device dispatch (one
+        PRNG split per step, not one fold_in per sequence), then commit
+        tokens / completions on the host."""
         self._key, sub = jax.random.split(self._key)
+        sps = [self.sample_params[s.seq_id] for s in seqs]
+        temps = np.asarray([sp.temperature for sp in sps], np.float32)
+        top_ps = np.asarray([sp.top_p for sp in sps], np.float32)
+        toks = np.asarray(sample_batch(logits, temps, top_ps, sub,
+                                       self.cfg.vocab_size))
+        self.sampler_dispatches += 1
         completions = []
-        toks = None
         for i, seq in enumerate(seqs):
-            sp = self.sample_params[seq.seq_id]
-            tok = int(sample(logits[i:i + 1], sp, jax.random.fold_in(sub, i),
-                             self.cfg.vocab_size)[0])
+            sp = sps[i]
+            tok = int(toks[i])
             seq.tokens.append(tok)
             if seq.seq_id not in self._ttft or self._ttft[seq.seq_id] == 0.0:
                 self._ttft[seq.seq_id] = time.monotonic() - self._requests[seq.seq_id].arrival

@@ -4,9 +4,10 @@ The NPU tier is a global page pool: k/v arrays of shape
 (L, n_pages, page_size, Hkv, hd) — stacked over attention layers so the
 jit'd decode step takes the whole pool as one donated operand. The DRAM
 tier is a host-side dict of swapped-out page runs (numpy). Block tables
-map sequences → page runs, exactly the vLLM/RTC block table. On real
-hardware the pool is sharded over the `model` mesh axis and tier moves are
-DistFlow DMAs; here they are device↔host copies.
+map sequences → page runs, exactly the vLLM/RTC block table. With a
+TP-sharded engine (EngineConfig.tp > 1) the pool's KV-head dim is sharded
+over the `model` mesh axis (pass ``sharding``); tier moves are DistFlow
+DMAs on real hardware, device↔host copies here.
 """
 from __future__ import annotations
 
@@ -37,15 +38,20 @@ class PagedKVPool:
     """Global NPU-tier KV pool for the attention layers of one engine."""
 
     def __init__(self, cfg: ModelConfig, n_pages: int, page_size: int,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, sharding=None):
         from repro.models.serving import attn_layer_count
         self.cfg = cfg
         self.n_layers = attn_layer_count(cfg)
         self.page_size = page_size
         self.n_pages = n_pages
+        self.sharding = sharding                 # NamedSharding over (…,Hkv,…)
         shape = (max(self.n_layers, 1), n_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
-        self.k = jnp.zeros(shape, dtype)
-        self.v = jnp.zeros(shape, dtype)
+        if sharding is not None:
+            self.k = jax.device_put(jnp.zeros(shape, dtype), sharding)
+            self.v = jax.device_put(jnp.zeros(shape, dtype), sharding)
+        else:
+            self.k = jnp.zeros(shape, dtype)
+            self.v = jnp.zeros(shape, dtype)
         self._free: List[int] = list(range(n_pages))
         self._refs: Dict[int, PageRef] = {}
         # DRAM tier: handle -> (k_np, v_np) of shape (L, NP_run, P, Hkv, hd)

@@ -21,17 +21,19 @@ disaggregation (DistFlow payloads).
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.engine.kv_cache import PagedKVPool, pages_needed
 from repro.kernels import ref as KREF
+from repro.launch import sharding as SH
 from repro.models import layers as L
 from repro.models import serving as S
 from repro.models import transformer as T
@@ -64,16 +66,40 @@ class SequenceState:
 
 
 class PagedRunner:
+    """With ``mesh`` set (EngineConfig.tp > 1) the runner is the TE's SPMD
+    executor: weights live sharded per launch/sharding.py's policy, the page
+    pool shards whole KV heads over `model`, and the jit'd decode/prefill
+    steps pin in_shardings/out_shardings so every step is one SPMD program
+    spanning the mesh (collectives inserted by GSPMD)."""
+
     def __init__(self, bundle: ModelBundle, params, pool: PagedKVPool,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, mesh=None):
         self.bundle = bundle
         self.cfg = bundle.cfg
-        self.params = params
         self.pool = pool
         self.dtype = dtype
+        self.mesh = mesh
+        if mesh is not None:
+            self._param_sh = SH.engine_param_shardings(self.cfg, params, mesh)
+            self._kv_sh = pool.sharding if pool.sharding is not None \
+                else SH.engine_kv_pool_sharding(self.cfg, mesh)
+            self._repl = NamedSharding(mesh, P())
+            params = jax.device_put(params, self._param_sh)
+        self.params = params
         self._wins = [int(w) for w in np.asarray(T.window_schedule(self.cfg))]
         self._decode_fns: Dict[int, Any] = {}
         self._prefill_fns: Dict[Tuple[int, int], Any] = {}
+
+    def _jit_step(self, fn, donate: Tuple[int, ...]):
+        """jit with TP shardings pinned when the runner spans a mesh:
+        weights keep their placement, token/page operands replicate, and the
+        (donated) KV pool stays head-sharded in and out."""
+        if self.mesh is None:
+            return jax.jit(fn, donate_argnums=donate)
+        r, kv = self._repl, self._kv_sh
+        return jax.jit(fn, donate_argnums=donate,
+                       in_shardings=(self._param_sh, r, r, r, kv, kv),
+                       out_shardings=(r, kv, kv))
 
     # ------------------------------------------------------------ decode
     def decode(self, seqs: List[SequenceState]) -> jax.Array:
@@ -101,7 +127,6 @@ class PagedRunner:
         wins = self._wins
         ps = self.pool.page_size
 
-        @functools.partial(jax.jit, donate_argnums=(4, 5))
         def step(params, tokens, bt, lengths, k_pool, v_pool):
             b = tokens.shape[0]
             x = T.embed(cfg, params, tokens[:, None])
@@ -135,6 +160,7 @@ class PagedRunner:
             logits = T.unembed(cfg, params, x)[:, 0]
             return logits, k_pool, v_pool
 
+        step = self._jit_step(step, donate=(4, 5))
         self._decode_fns[maxp] = step
         return step
 
@@ -165,7 +191,6 @@ class PagedRunner:
         wins = self._wins
         ps = self.pool.page_size
 
-        @functools.partial(jax.jit, donate_argnums=(4, 5))
         def run(params, tokens, start, bt, k_pool, v_pool):
             x = T.embed(cfg, params, tokens)                    # (1,C,D)
             positions = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None]
@@ -202,6 +227,7 @@ class PagedRunner:
             logits = T.unembed(cfg, params, x[:, -1:])[:, 0]
             return logits, k_pool, v_pool
 
+        run = self._jit_step(run, donate=(4, 5))
         self._prefill_fns[key] = run
         return run
 
@@ -226,17 +252,34 @@ class PagedRunner:
 
 class SlotRunner:
     def __init__(self, bundle: ModelBundle, params, n_slots: int, max_len: int,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, mesh=None):
         self.bundle = bundle
         self.cfg = bundle.cfg
-        self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
         self.dtype = dtype
-        self.cache = bundle.init_cache(n_slots, max_len, dtype)
+        self.mesh = mesh
+        cache = bundle.init_cache(n_slots, max_len, dtype)
+        if mesh is not None:
+            # SPMD TE: weights + dense per-slot caches shard per
+            # launch/sharding.py (k/v shard the sequence dim over the mesh;
+            # recurrent state shards its width/head dims where divisible).
+            self._param_sh = SH.engine_param_shardings(self.cfg, params, mesh)
+            self._cache_sh = SH.engine_cache_shardings(self.cfg, cache, mesh,
+                                                       n_slots, max_len)
+            self._repl = NamedSharding(mesh, P())
+            params = jax.device_put(params, self._param_sh)
+            cache = jax.device_put(cache, self._cache_sh)
+            self._decode_jit = jax.jit(
+                lambda p, t, c: S.decode_step(self.cfg, p, t, c),
+                in_shardings=(self._param_sh, self._repl, self._cache_sh),
+                out_shardings=(self._repl, self._cache_sh))
+        else:
+            self._decode_jit = jax.jit(
+                lambda p, t, c: S.decode_step(self.cfg, p, t, c))
+        self.params = params
+        self.cache = cache
         self.free_slots = list(range(n_slots))
-        self._decode_jit = jax.jit(
-            lambda p, t, c: S.decode_step(self.cfg, p, t, c))
         self._prefill_jits: Dict[int, Any] = {}
 
     # batch-dim axis for every cache leaf except `length`
@@ -293,7 +336,15 @@ class SlotRunner:
         def run(params, tokens, cache, extra):
             return S.prefill(cfg, params, tokens, cache, **extra)
 
-        self._prefill_jits[c] = jax.jit(run)
+        if self.mesh is not None:
+            # `extra` (modality stubs) replicates: a single sharding works as
+            # a pytree prefix over the whole dict.
+            run = jax.jit(run, in_shardings=(self._param_sh, self._repl,
+                                             self._cache_sh, self._repl),
+                          out_shardings=(self._repl, self._cache_sh))
+        else:
+            run = jax.jit(run)
+        self._prefill_jits[c] = run
         return self._prefill_jits[c]
 
     def decode(self, seqs: List[SequenceState]) -> jax.Array:

@@ -1,10 +1,21 @@
-"""Sampling for FLOWSERVE's model generator: greedy / temperature / top-p."""
+"""Sampling for FLOWSERVE's model generator: greedy / temperature / top-p.
+
+Two entry points:
+  * ``sample``       — one SamplingParams for a whole logits batch (oracle /
+                       offline paths).
+  * ``sample_batch`` — per-row temperature/top-p as arrays, one jit'd device
+                       dispatch for the whole decode batch (the engine hot
+                       path: one ``fold_in``-free split per step, not one
+                       dispatch per sequence).
+"""
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclass(frozen=True)
@@ -33,3 +44,49 @@ def sample(logits: jax.Array, params: SamplingParams, key: jax.Array,
         cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
         logits = jnp.where(logits < cutoff, -1e30, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnums=(4,))
+def _sample_batch(logits: jax.Array, temperature: jax.Array, top_p: jax.Array,
+                  key: jax.Array, vocab_size: int) -> jax.Array:
+    vp = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if vp > vocab_size:
+        logits = jnp.where(jnp.arange(vp)[None, :] >= vocab_size, -1e30, logits)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    # greedy rows (t<=0) still flow through the stochastic path below with a
+    # clamped temperature; their result is discarded by the final where.
+    t = jnp.maximum(temperature, 1e-6)[:, None]
+    scaled = logits / t
+    sorted_logits = jnp.sort(scaled, axis=-1)[:, ::-1]
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    cutoff_idx = jnp.sum(cum < top_p[:, None], axis=-1, keepdims=True)
+    cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+    limited = jnp.where(scaled < cutoff, -1e30, scaled)
+    final = jnp.where((top_p < 1.0)[:, None], limited, scaled)
+    keys = jax.random.split(key, logits.shape[0])
+    drawn = jax.vmap(
+        lambda k, row: jax.random.categorical(k, row))(keys, final)
+    return jnp.where(temperature <= 0.0, greedy, drawn.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _greedy_batch(logits: jax.Array, vocab_size: int) -> jax.Array:
+    vp = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if vp > vocab_size:
+        logits = jnp.where(jnp.arange(vp)[None, :] >= vocab_size, -1e30, logits)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample_batch(logits: jax.Array, temperature, top_p, key: jax.Array,
+                 vocab_size: int) -> jax.Array:
+    """logits: (B, Vp) with per-row params -> token ids (B,). One device
+    dispatch for the whole batch; an all-greedy batch (the common serving
+    default) skips the sort/softmax/categorical pipeline entirely."""
+    temperature = np.asarray(temperature, np.float32)
+    if temperature.size == 0 or float(temperature.max()) <= 0.0:
+        return _greedy_batch(logits, vocab_size)
+    return _sample_batch(logits, jnp.asarray(temperature),
+                         jnp.asarray(top_p, jnp.float32), key, vocab_size)

@@ -12,19 +12,39 @@ from __future__ import annotations
 import jax
 
 
+def _mk(shape, axes):
+    """jax.make_mesh across jax versions: axis_types only exists on newer
+    releases (all axes are Auto there anyway, which is also the default)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mk(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh for CPU tests (requires forced host device count)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _mk((data, model), ("data", "model"))
+
+
+def make_engine_mesh(tp: int):
+    """1×tp ("data","model") mesh for one FLOWSERVE TE: the TE's NPUs form a
+    pure tensor-parallel SPMD group; data parallelism happens across TEs
+    (the JE schedules requests over engines), never inside one (DESIGN.md §5).
+    """
+    n = jax.device_count()
+    if tp > n:
+        raise RuntimeError(
+            f"EngineConfig.tp={tp} exceeds the visible device count {n}; "
+            "for simulated-host runs set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={max(tp, 8)} before jax initializes")
+    return make_host_mesh(data=1, model=tp)
 
 
 def dp_axes(mesh) -> tuple:

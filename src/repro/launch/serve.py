@@ -24,8 +24,8 @@ from repro.engine.tokenizer import ByteTokenizer
 from repro.models import get_model
 
 
-def build_te(bundle, params, mode: str, name: str) -> FlowServe:
-    ecfg = EngineConfig(mode=mode, n_pages=256, page_size=8, n_slots=8,
+def build_te(bundle, params, mode: str, name: str, tp: int = 1) -> FlowServe:
+    ecfg = EngineConfig(mode=mode, tp=tp, n_pages=256, page_size=8, n_slots=8,
                         max_len=256, max_batch_tokens=64, chunk_size=16,
                         max_decode_batch=8)
     return FlowServe(bundle, params, ecfg, name=name)
@@ -38,7 +38,13 @@ def main() -> None:
                     choices=["colocated", "pd", "scheduled"])
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="devices per TE (SPMD tensor parallelism; simulated "
+                         "hosts need XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N)")
     args = ap.parse_args()
+    if args.tp > 1:
+        print(f"TE mesh: 1x{args.tp} over {jax.device_count()} visible devices")
 
     bundle = get_model(args.arch, smoke=True)
     params = bundle.init_params(jax.random.PRNGKey(0), jnp.float32)
@@ -48,7 +54,7 @@ def main() -> None:
     prompts = [f"request {i}: explain serverless llm serving" for i in range(args.requests)]
 
     if args.mode == "colocated":
-        te = build_te(bundle, params, "colocated", "te-0")
+        te = build_te(bundle, params, "colocated", "te-0", tp=args.tp)
         t0 = time.monotonic()
         for p in prompts:
             te.add_request(Request(prompt_tokens=tok.encode(p), sampling=sp))
@@ -63,8 +69,8 @@ def main() -> None:
         return
 
     if args.mode == "pd":
-        pe = build_te(bundle, params, "prefill", "te-p0")
-        de = build_te(bundle, params, "decode", "te-d0")
+        pe = build_te(bundle, params, "prefill", "te-p0", tp=args.tp)
+        de = build_te(bundle, params, "decode", "te-d0", tp=args.tp)
         pe.distflow.link_cluster([de.distflow])
         for p in prompts:
             pe.add_request(Request(prompt_tokens=tok.encode(p), sampling=sp))
@@ -92,8 +98,8 @@ def main() -> None:
     xs, ys, _ = synth_trace(2000, PredictorConfig())
     pparams, acc = train_predictor(PredictorConfig(), xs, ys)
     pred = DecodeLengthPredictor(PredictorConfig(), pparams)
-    tes = [TEHandle("te-c0", "colocated", engine=build_te(bundle, params, "colocated", "te-c0")),
-           TEHandle("te-c1", "colocated", engine=build_te(bundle, params, "colocated", "te-c1")),
+    tes = [TEHandle("te-c0", "colocated", engine=build_te(bundle, params, "colocated", "te-c0", tp=args.tp)),
+           TEHandle("te-c1", "colocated", engine=build_te(bundle, params, "colocated", "te-c1", tp=args.tp)),
            TEHandle("te-pd0", "pd_pair")]
     ds = DistributedScheduler(tes, hs.combined(), hs.prefill_lens,
                               hs.decode_ratios, predictor=pred)

@@ -30,12 +30,26 @@ def _div(n: int, k: int = TP) -> bool:
     return n % k == 0
 
 
-def param_specs(cfg: ModelConfig, params_like, mode: str, dp: Tuple[str, ...]
-                ) -> Any:
+def attn_shardable(cfg: ModelConfig, tp: int) -> bool:
+    """Engine-TP predicate: shard attention only when Q *and* KV heads both
+    split evenly over the model axis. The launch path only needs the flat
+    head dim divisible (matmul sharding), but the serving engine also shards
+    the paged KV pool by whole KV heads, so e.g. qwen3 (8 KV heads) at tp=16
+    or granite (2 KV heads smoke) at tp=4 must replicate attention and shard
+    only FFN / vocab (DESIGN.md §5)."""
+    return cfg.n_heads % tp == 0 and cfg.n_kv_heads % tp == 0
+
+
+def param_specs(cfg: ModelConfig, params_like, mode: str, dp: Tuple[str, ...],
+                tp: int = TP, heads_ok: Optional[bool] = None) -> Any:
     """Pytree of PartitionSpec matching `params_like` (train adds FSDP on
     d_model over `data`). `dp` = the mesh's DP axes (("data",) or
-    ("pod","data")); FSDP always uses the intra-pod "data" axis."""
-    heads_ok = cfg.tp_heads_ok(TP)
+    ("pod","data")); FSDP always uses the intra-pod "data" axis. `tp` is the
+    model-axis size (16 on the production mesh; the serving engine passes
+    EngineConfig.tp); `heads_ok` overrides the attention-shardability rule
+    (the engine uses the stricter attn_shardable)."""
+    if heads_ok is None:
+        heads_ok = cfg.tp_heads_ok(tp)
     fsdp = "data" if mode == "train" else None
 
     def spec_for(path: str, leaf) -> P:
@@ -50,9 +64,9 @@ def param_specs(cfg: ModelConfig, params_like, mode: str, dp: Tuple[str, ...]
 
         name = path
         if "embed" in name:
-            if _div(cfg.padded_vocab):
+            if _div(cfg.padded_vocab, tp):
                 dims[0] = "model"
-                if fsdp and _div(cfg.d_model, TP):
+                if fsdp and _div(cfg.d_model, tp):
                     dims[1] = fsdp
             else:
                 dims[1] = "model"
@@ -114,7 +128,7 @@ def param_specs(cfg: ModelConfig, params_like, mode: str, dp: Tuple[str, ...]
 
 
 def cache_specs(cfg: ModelConfig, cache_like, shape: ShapeConfig,
-                dp: Tuple[str, ...]) -> Any:
+                dp: Tuple[str, ...], tp: int = TP) -> Any:
     """Decode/prefill cache sharding. k/v: (L, B, S, Hkv, hd)."""
     batch_shardable = shape.global_batch >= 16
 
@@ -130,7 +144,7 @@ def cache_specs(cfg: ModelConfig, cache_like, shape: ShapeConfig,
             return P(None, dp if batch_shardable else None, None, None, None)
         if "['state']" in name:       # rwkv (L,B,H,hdk,hdv)
             return P(None, dp if batch_shardable else None,
-                     "model" if cfg.tp_heads_ok(TP) else None, None, None)
+                     "model" if cfg.tp_heads_ok(tp) else None, None, None)
         if "last_tm" in name or "last_cm" in name:
             return P(None, dp if batch_shardable else None, None)
         if "['h']" in name:           # rglru (L,B,W)
@@ -168,3 +182,57 @@ def block_param_specs(cfg: ModelConfig, params_like, mode: str,
 def named(mesh, spec_tree):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Engine (FLOWSERVE TE) shardings: a TE's NPUs form a 1×tp ("data","model")
+# mesh; DP happens across TEs, not inside one, so only the model axis is
+# populated here.
+# ---------------------------------------------------------------------------
+
+
+def prune_unsplittable(spec_tree, arrays_like, mesh) -> Any:
+    """Replace mesh-axis entries that do not divide their dim evenly with
+    replication. GSPMD would pad uneven shards; the serving hot path prefers
+    plain replication for the handful of odd dims in the zoo (granite 24H,
+    recurrentgemma 10H, awkward vocab remainders)."""
+    def prune(spec, leaf):
+        dims = list(spec) + [None] * (leaf.ndim - len(spec))
+        for i, ax in enumerate(dims):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            if size == 0 or leaf.shape[i] % size != 0:
+                dims[i] = None
+        return P(*dims)
+
+    return jax.tree.map(prune, spec_tree, arrays_like,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def engine_param_shardings(cfg: ModelConfig, params_like, mesh) -> Any:
+    """NamedSharding pytree for a TE's weights on its 1×tp mesh."""
+    tp = int(mesh.shape["model"])
+    specs = param_specs(cfg, params_like, "serve", ("data",), tp=tp,
+                        heads_ok=attn_shardable(cfg, tp))
+    return named(mesh, prune_unsplittable(specs, params_like, mesh))
+
+
+def engine_kv_pool_sharding(cfg: ModelConfig, mesh) -> NamedSharding:
+    """Paged KV pool (L, n_pages, page_size, Hkv, hd): whole KV heads shard
+    over `model` when attention is TP-sharded, else the pool replicates."""
+    tp = int(mesh.shape["model"])
+    spec = P(None, None, None, "model", None) if attn_shardable(cfg, tp) else P()
+    return NamedSharding(mesh, spec)
+
+
+def engine_cache_shardings(cfg: ModelConfig, cache_like, mesh,
+                           n_slots: int, max_len: int) -> Any:
+    """SlotRunner dense caches: reuse cache_specs with an engine-shaped
+    ShapeConfig (slot batches are small, so k/v shard the sequence dim over
+    (data×model) — context parallelism inside the TE)."""
+    tp = int(mesh.shape["model"])
+    shape = ShapeConfig("engine_slots", "decode", max_len, n_slots)
+    specs = cache_specs(cfg, cache_like, shape, ("data",), tp=tp)
+    return named(mesh, prune_unsplittable(specs, cache_like, mesh))

@@ -1,0 +1,12 @@
+"""Force a multi-device host platform BEFORE jax initializes, so the SPMD
+tensor-parallel engine tests (tests/test_tp_engine.py) can build real 1×tp
+meshes on CPU. Harmless for single-device tests: plain jits still run on
+device 0. Conftest is imported before any test module, which is the only
+reliable place to set XLA_FLAGS under plain `python -m pytest`.
+"""
+import os
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = \
+        (_flags + " --xla_force_host_platform_device_count=8").strip()

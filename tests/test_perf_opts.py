@@ -20,6 +20,7 @@ def test_banded_swa_equals_masked():
     np.testing.assert_allclose(np.asarray(o_band), np.asarray(o_ref), atol=2e-4)
 
 
+@pytest.mark.slow
 def test_windowed_decode_equals_full():
     """decode with windowed KV slice == full-cache masked decode."""
     from repro.models import get_model

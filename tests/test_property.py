@@ -3,7 +3,9 @@ import string
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="pip install -r requirements-dev.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.engine.kv_cache import OutOfPagesError, pages_needed
 from repro.engine.radix_tree import RadixTree

@@ -20,6 +20,7 @@ def _tes():
             TEHandle("p0", "pd_pair"), TEHandle("p1", "pd_pair")]
 
 
+@pytest.mark.slow
 def test_heatmap_directions(heat):
     g = heat.combined()
     # long prefill, short decode => PD-disaggregated wins (positive)
@@ -28,11 +29,13 @@ def test_heatmap_directions(heat):
     assert g.max() > -g.min()
 
 
+@pytest.mark.slow
 def test_heatmap_stability(heat):
     # paper: >80% of cells keep a consistent sign across RPS values
     assert heat.stability() >= 0.8
 
 
+@pytest.mark.slow
 def test_pd_aware_selects_type(heat):
     ds = DistributedScheduler(_tes(), heat.combined(), heat.prefill_lens,
                               heat.decode_ratios)
@@ -41,6 +44,7 @@ def test_pd_aware_selects_type(heat):
     assert {t.te_type for t in sub} == {"pd_pair"}
 
 
+@pytest.mark.slow
 def test_locality_prefers_prefix_holder(heat):
     tes = _tes()
     ds = DistributedScheduler(tes, heat.combined(), heat.prefill_lens,
@@ -52,6 +56,7 @@ def test_locality_prefers_prefix_holder(heat):
     assert chosen.te_id == "c1"
 
 
+@pytest.mark.slow
 def test_load_aware_fallback_when_unbalanced(heat):
     tes = _tes()
     ds = DistributedScheduler(tes, heat.combined(), heat.prefill_lens,

@@ -52,6 +52,7 @@ def _engine(bundle, params, mode="colocated", **kw):
     return FlowServe(bundle, params, ecfg, name=f"te-{mode}")
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen3-8b", "mixtral-8x7b", "rwkv6-1.6b",
                                   "recurrentgemma-2b", "seamless-m4t-large-v2"])
 def test_engine_matches_oracle(arch):
@@ -79,6 +80,7 @@ def test_prefix_cache_hit_and_reuse(qwen):
     assert comps[rid2].tokens == _oracle(bundle, params, p, 6)
 
 
+@pytest.mark.slow
 def test_rtc_dram_tier_populate(qwen):
     bundle, params = qwen
     eng = _engine(bundle, params)
@@ -100,6 +102,7 @@ def test_rtc_dram_tier_populate(qwen):
     assert eng.rtc.stats["populates"] >= 1
 
 
+@pytest.mark.slow
 def test_preemption_under_page_pressure(qwen):
     bundle, params = qwen
     sp = SamplingParams(temperature=0.0, max_new_tokens=40, stop_on_eos=False)
@@ -116,6 +119,7 @@ def test_preemption_under_page_pressure(qwen):
         assert comps[rid].tokens == _oracle(bundle, params, p, 40)
 
 
+@pytest.mark.slow
 def test_pd_disaggregated_equals_oracle(qwen):
     bundle, params = qwen
     prompts = _prompts(3, length=14)
@@ -160,6 +164,7 @@ def test_async_vs_sync_same_output(qwen):
     assert outs[0] == outs[1]
 
 
+@pytest.mark.slow
 def test_je_cluster_wiring(qwen):
     """Request → JE decompose → TE dispatch → completions (§3 wiring)."""
     bundle, params = qwen

@@ -1,0 +1,139 @@
+"""PD KV-migration benchmark (DistFlow v2, DESIGN.md §7).
+
+Per-request migration bytes and simulated seconds for the v1 host-gather
+path (numpy round-trip + un-donated full-pool rewrite, kept behind
+``host_gather=True``) vs the v2 sharded device path (jit'd sharded gather →
+per-link ICI transfer → single donated scatter) at tp ∈ {1,2,4}. The v2 sim
+time shows the bytes/tp-per-link speedup; the ``pool_copies`` column shows
+the import rewrites the whole pool 2× per request on the v1 path and 0× on
+the v2 path.
+
+    PYTHONPATH=src python benchmarks/bench_pd_migration.py [--arch qwen3-8b]
+        [--tp 1,2,4] [--requests 4] [--prompt-len 40]
+
+Also exposes run() -> CSV rows for benchmarks/run.py (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import os
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = \
+        (_flags + " --xla_force_host_platform_device_count=8").strip()
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine import EngineConfig, FlowServe, Request, SamplingParams
+from repro.models import get_model
+
+
+def _prompts(n: int, length: int) -> list:
+    return [[1] + [int(x) for x in
+                   np.random.RandomState(i).randint(3, 200, length)]
+            for i in range(n)]
+
+
+def _te(bundle, params, mode, tp, offset=0):
+    ecfg = EngineConfig(mode=mode, tp=tp, device_offset=offset, n_pages=128,
+                        page_size=8, max_batch_tokens=64, chunk_size=16,
+                        max_decode_batch=8, enable_prefix_cache=False)
+    return FlowServe(bundle, params, ecfg, name=f"te-{mode}-tp{tp}@{offset}")
+
+
+def bench_path(bundle, params, tp: int, n_requests: int, prompt_len: int,
+               host_gather: bool) -> dict:
+    pe = _te(bundle, params, "prefill", tp)
+    offset = tp if tp > 1 and 2 * tp <= jax.device_count() else 0
+    de = _te(bundle, params, "decode", tp, offset)
+    pe.distflow.link_cluster([de.distflow])
+    sp = SamplingParams(temperature=0.0, max_new_tokens=4, stop_on_eos=False)
+    for p in _prompts(n_requests, prompt_len):
+        pe.add_request(Request(prompt_tokens=p, sampling=sp))
+    ready = []
+    while pe.has_work():
+        pe.step()
+        ready.extend(pe.pop_migratable())
+    log0, dlog0 = len(pe.distflow.log), len(de.distflow.log)
+    t0 = time.monotonic()
+    for rid in ready:
+        # overlap=False: the import scatter lands inside the timed region so
+        # host and device paths are compared end to end
+        pe.migrate_out(rid, de, overlap=False, host_gather=host_gather)
+    wall = time.monotonic() - t0
+    # both endpoints' logs: the host path charges DtoH (P side), wire, and
+    # HtoD (D side); the sharded path is a single per-link wire transfer
+    xfers = pe.distflow.log[log0:] + de.distflow.log[dlog0:]
+    n_done = len(de.run_to_completion())
+    assert n_done == n_requests
+    return {
+        "path": "host_gather" if host_gather else "sharded",
+        "tp": tp,
+        "bytes_per_req": sum(x.n_bytes for x in xfers) / n_requests,
+        "sim_s_per_req": sum(x.sim_seconds for x in xfers) / n_requests,
+        "wall_s_per_req": wall / n_requests,
+        "links": max(x.links for x in xfers),
+        "pool_copies": de.pool.full_pool_copies / n_requests,
+    }
+
+
+def bench_tp(arch: str, tp: int, n_requests: int, prompt_len: int) -> list:
+    bundle = get_model(arch, smoke=True)
+    params = bundle.init_params(jax.random.PRNGKey(0), jnp.float32)
+    return [bench_path(bundle, params, tp, n_requests, prompt_len, hg)
+            for hg in (True, False)]
+
+
+def run() -> list:
+    """CSV rows for benchmarks/run.py: (name, value, derived)."""
+    rows = []
+    for tp in (1, 2, 4):
+        if tp > jax.device_count():
+            rows.append((f"pd_migration_tp{tp}_SKIPPED", 0.0,
+                         f"only {jax.device_count()} devices; run via "
+                         "`make bench` or set XLA_FLAGS"))
+            continue
+        host, shard = bench_tp("qwen3-8b", tp, n_requests=4, prompt_len=40)
+        speedup = host["sim_s_per_req"] / max(shard["sim_s_per_req"], 1e-12)
+        rows.append((
+            f"pd_migration_tp{tp}_sharded_sim_us",
+            shard["sim_s_per_req"] * 1e6,
+            f"host={host['sim_s_per_req'] * 1e6:.1f}us speedup={speedup:.2f}x "
+            f"links={shard['links']} bytes/req={shard['bytes_per_req']:.0f} "
+            f"pool_copies={shard['pool_copies']:.0f} "
+            f"(host path: {host['pool_copies']:.0f})"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--tp", default="1,2,4")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=40)
+    args = ap.parse_args()
+
+    print(f"devices={jax.device_count()} arch={args.arch}-smoke "
+          f"requests={args.requests} prompt_len={args.prompt_len}")
+    print(f"{'tp':>4} {'path':>12} {'KB/req':>8} {'sim_us/req':>11} "
+          f"{'wall_ms/req':>12} {'links':>6} {'pool_copies':>12}")
+    for tp_s in args.tp.split(","):
+        tp = int(tp_s)
+        if tp > jax.device_count():
+            print(f"{tp:>4} skipped: only {jax.device_count()} devices")
+            continue
+        for r in bench_tp(args.arch, tp, args.requests, args.prompt_len):
+            print(f"{r['tp']:>4} {r['path']:>12} "
+                  f"{r['bytes_per_req'] / 1e3:>8.1f} "
+                  f"{r['sim_s_per_req'] * 1e6:>11.2f} "
+                  f"{r['wall_s_per_req'] * 1e3:>12.2f} {r['links']:>6} "
+                  f"{r['pool_copies']:>12.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,7 @@ MODULES = [
     ("fig11", "benchmarks.bench_fig11_npufork"),
     ("roofline", "benchmarks.bench_roofline"),
     ("tp_engine", "benchmarks.bench_tp_engine"),
+    ("pd_migration", "benchmarks.bench_pd_migration"),
 ]
 
 

@@ -13,7 +13,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.engine import EngineConfig, FlowServe, Request, SamplingParams
-from repro.engine.distflow import BufferInfo
 from repro.engine.tokenizer import ByteTokenizer
 from repro.models import get_model
 
@@ -43,15 +42,15 @@ def main() -> None:
            or prefill_te._prefill_done_buffer):
         prefill_te.step()
         for rid in prefill_te.pop_migratable():
-            payload = prefill_te.export_kv(rid)
-            xfer = prefill_te.distflow.transfer(
-                BufferInfo(owner=prefill_te.name, tier="npu", payload=payload),
-                BufferInfo(owner=decode_te.name, tier="npu",
-                           deliver=decode_te.import_request))
-            prefill_te.release_request(rid, keep_prefix=False)
+            # DistFlow v2: the KV run never leaves the devices — sharded
+            # page runs stream over; the decode TE imports lazily at the
+            # sequence's first decode step
+            prefill_te.migrate_out(rid, decode_te)
+            xfer = prefill_te.distflow.log[-1]
             migrated += 1
             print(f"[pd] migrated {rid}: {xfer.n_bytes / 1e3:.1f} KB KV over "
-                  f"{xfer.backend} (sim {xfer.sim_seconds * 1e6:.0f}us)")
+                  f"{xfer.backend}x{xfer.links} links "
+                  f"(sim {xfer.sim_seconds * 1e6:.0f}us)")
         comps.extend(decode_te.step())
     print(f"[pd] {migrated} migrations, {len(comps)} completions "
           f"in {time.monotonic() - t0:.2f}s")

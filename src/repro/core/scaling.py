@@ -9,12 +9,12 @@ benchmarks measure the same code the autoscaler runs.
 """
 from __future__ import annotations
 
-import math
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
-from repro.engine.distflow import BACKENDS, BufferInfo, DistFlow
+from repro.engine.distflow import (BACKENDS, BufferInfo, DistFlow,
+                                   _fanout_penalty, _nbytes)
 
 
 @dataclass
@@ -84,6 +84,50 @@ class LoadResult:
     path: str                           # "dram_hit" | "dram_miss" | "npu_fork_ici" | "npu_fork_dcn"
     seconds: float
     bytes_moved: int
+    params: Any = None                  # live-fork path: the forked pytree
+
+
+def npu_fork_live(params, cfg, dst_mesh, source: Optional[DistFlow] = None,
+                  link: str = "ici", dst_device=None,
+                  target_owners=(), contention: float = 1.0):
+    """NPU-fork v2 (§6.3, DESIGN.md §7): fork weights PER-SHARD from a live
+    sharded TE onto a new TE's mesh, replacing re-initialization.
+
+    Each destination shard fills via ``jax.device_put`` from the source's
+    resident params under the destination mesh's own sharding policy
+    (``engine_param_shardings``) — the ICI analogue of per-rank HCCL
+    broadcast: tp parallel links each move bytes/tp. ``link="dcn"`` prices
+    the scale-out fallback over a single per-host link. ``dst_mesh=None``
+    gathers onto ``dst_device`` (a tp=1 target). Returns
+    ``(forked_params, LoadResult)`` and charges the transfer on ``source``'s
+    DistFlow clock/log when given.
+    """
+    import jax
+
+    from repro.launch import sharding as SH
+    if dst_mesh is not None:
+        shardings = SH.engine_param_shardings(cfg, params, dst_mesh)
+        forked = jax.device_put(params, shardings)
+        tp = int(dst_mesh.shape["model"])
+    else:
+        forked = jax.device_put(params,
+                                dst_device if dst_device is not None
+                                else jax.devices()[0])
+        tp = 1
+    n = _nbytes(params)
+    backend = "ici" if link == "ici" else "dcn"
+    links = tp if backend == "ici" else 1
+    if source is not None:
+        # charge() advances the source clock AND every linked target's, and
+        # the contention multiplier lands in the clock/log too, so the
+        # returned seconds and the DistFlow accounting agree
+        xfer = source.charge(n, backend, links=links, fanout=contention,
+                             peer_owners=tuple(target_owners))
+        secs = xfer.sim_seconds
+    else:
+        spec = BACKENDS[backend]
+        secs = spec["lat"] + (n / max(1, links) / spec["bw"]) * contention
+    return forked, LoadResult(f"npu_fork_{link}", secs, n, params=forked)
 
 
 class ModelLoader:
@@ -106,10 +150,21 @@ class ModelLoader:
     def npu_fork(self, asset: ModelAsset, source: DistFlow,
                  targets: List[DistFlow], link: str = "ici",
                  source_busy_frac: float = 0.0,
-                 payload=None) -> LoadResult:
+                 payload=None, dst_mesh=None, cfg=None) -> LoadResult:
         """Broadcast weights from a running TE to `targets` (§6.2). Dedicated
         transfer engines keep interference low: `source_busy_frac` models
-        prefill/decode contention on the source (Figure 11b/c)."""
+        prefill/decode contention on the source (Figure 11b/c).
+
+        With a real params pytree in ``payload`` plus ``cfg`` (+ optionally
+        ``dst_mesh``), this is the LIVE per-shard fork: the weights actually
+        move onto the destination mesh (npu_fork_live) instead of the
+        byte-counting simulation."""
+        if payload is not None and cfg is not None:
+            _, lr = npu_fork_live(
+                payload, cfg, dst_mesh, source=source, link=link,
+                target_owners=tuple(t.owner for t in targets),
+                contention=1.0 + 0.15 * source_busy_frac)
+            return lr
         per_te = asset.n_bytes / asset.tp
         src = BufferInfo(owner=source.owner, tier="npu",
                          payload=payload if payload is not None else b"\0")
@@ -117,7 +172,7 @@ class ModelLoader:
                 for t in targets]
         xfers = source.broadcast(src, dsts, backend="ici" if link == "ici" else "dcn")
         bw = BACKENDS["ici" if link == "ici" else "dcn"]["bw"]
-        fanout = 1.0 + 0.1 * max(0, math.ceil(math.log2(max(len(targets), 1))))
+        fanout = _fanout_penalty(len(targets))
         contention = 1.0 + 0.15 * source_busy_frac   # AICPU-offloaded: small
         secs = (per_te / bw) * fanout * contention
         return LoadResult(f"npu_fork_{link}", secs, int(per_te) * len(targets))

@@ -3,19 +3,33 @@ between engines.
 
 Control plane: ``LinkCluster`` builds peer groups (the M:N prefill↔decode
 channels of §4.6). Data plane: ``transfer(src_info, dst_info)`` on raw
-buffers. Backends model the two Ascend fabrics on TPU terms:
+buffers and — the v2 path — ``transfer_sharded`` on device-resident
+``jax.Array`` payloads that never round-trip through the host. Backends
+model the two Ascend fabrics on TPU terms:
   * "ici"    — scaled-up intra-pod links (HCCS analogue), ~50 GB/s/link
   * "dcn"    — scaled-out inter-pod network (RoCE analogue), ~25 GB/s/host
   * "memcpy" — SuperPod global-shared-memory analogue (host copy)
 Transfers move real numpy/JAX buffers in-process and charge transfer time
 on a simulated clock so cluster-scale benchmarks (Figures 10/11) read the
-same code path the engine uses.
+same code path the engine uses. Both endpoints of a transfer observe the
+elapsed time: the initiator's clock AND the linked peer's clock advance.
+
+DistFlow v2 (DESIGN.md §7): a sharded transfer moves per-shard page runs
+"device-to-device". With `links` parallel ICI links between the endpoint
+TEs (one per shard pair, links = min(src_tp, dst_tp)), each link carries
+``n_bytes/links``, so wire time is ``n/(links·bw)``; DCN is a per-host
+fallback priced over a single link. When the endpoints' tp differ, the
+payload is resharded in flight via ``jax.device_put`` to the destination
+mesh's sharding. Transfers are layer-chunked: each chunk's device_put is
+dispatched asynchronously, and the returned ``MigrationHandle`` blocks
+only at ``wait()`` — a decode TE keeps stepping while KV streams in.
 """
 from __future__ import annotations
 
 import itertools
+import math
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -48,12 +62,44 @@ class Transfer:
     sim_seconds: float
     wall_seconds: float
     done: bool = True
+    links: int = 1                 # parallel fabric links priced (v2 sharded)
+
+
+@dataclass
+class MigrationHandle:
+    """Async sharded-KV migration. The chunk device_puts were already
+    dispatched (jax async dispatch), so the source is free immediately;
+    ``wait()`` blocks until every chunk has landed on the destination
+    devices and returns the scatter-ready payload
+    ``{"chunks": [(layer_start, k_run, v_run), ...]}``."""
+    xfer: Transfer
+    chunks: List[Tuple[int, Any, Any]]
+
+    def wait(self) -> Dict[str, Any]:
+        import jax
+        for _, kc, vc in self.chunks:
+            jax.block_until_ready(kc)
+            jax.block_until_ready(vc)
+        self.xfer.done = True
+        return {"chunks": self.chunks}
+
+    @property
+    def n_bytes(self) -> int:
+        return self.xfer.n_bytes
 
 
 def _nbytes(x) -> int:
     import jax
-    leaves = jax.tree.leaves(x)
-    return int(sum(np.asarray(l).nbytes for l in leaves))
+    total = 0
+    for leaf in jax.tree.leaves(x):
+        nb = getattr(leaf, "nbytes", None)   # jax.Array/ndarray: no host copy
+        total += int(nb) if nb is not None else int(np.asarray(leaf).nbytes)
+    return total
+
+
+def _fanout_penalty(n_dsts: int) -> float:
+    """Tree-broadcast depth penalty (HCCL-broadcast analogue)."""
+    return 1.0 + 0.1 * max(0, math.ceil(math.log2(max(n_dsts, 1))))
 
 
 class DistFlow:
@@ -75,44 +121,99 @@ class DistFlow:
             self.peers[p.owner] = p
             p.peers[self.owner] = self
 
-    # -------------------------------------------------------- data
+    # -------------------------------------------------------- accounting
+    def charge(self, n_bytes: int, backend: str, *, links: int = 1,
+               fanout: float = 1.0, peer_owners: Tuple[str, ...] = (),
+               wall: float = 0.0, done: bool = True) -> Transfer:
+        """Price a transfer and advance BOTH endpoints' clocks: the
+        initiator and every linked peer observe the elapsed fabric time.
+        Latency is charged once — chunked/streamed payloads pipeline each
+        chunk's launch latency behind its predecessor's wire time."""
+        spec = BACKENDS[backend]
+        links = max(1, links)
+        sim = spec["lat"] + (n_bytes / links / spec["bw"]) * fanout
+        self.sim_clock += sim
+        for owner in set(peer_owners):
+            peer = self.peers.get(owner)
+            if peer is not None and peer is not self:
+                peer.sim_clock += sim
+        xfer = Transfer(next(_xfer_ids), n_bytes, backend, sim, wall,
+                        done=done, links=links)
+        self.log.append(xfer)
+        return xfer
+
+    # -------------------------------------------------------- data (v1)
     def transfer(self, src: BufferInfo, dst: BufferInfo,
                  backend: Optional[str] = None) -> Transfer:
         """Synchronous-completion transfer of src.payload to dst.deliver.
         Charges simulated time by backend bandwidth/latency."""
         backend = backend or self._pick_backend(src, dst)
-        spec = BACKENDS[backend]
         t0 = time.monotonic()
         payload = src.payload
         if dst.deliver is not None:
             dst.deliver(payload)
-        n = _nbytes(payload)
-        sim = spec["lat"] + n / spec["bw"]
-        self.sim_clock += sim
-        xfer = Transfer(next(_xfer_ids), n, backend, sim, time.monotonic() - t0)
-        self.log.append(xfer)
-        return xfer
+        return self.charge(_nbytes(payload), backend,
+                           peer_owners=(dst.owner,),
+                           wall=time.monotonic() - t0)
 
     def broadcast(self, src: BufferInfo, dsts: List[BufferInfo],
                   backend: Optional[str] = None) -> List[Transfer]:
         """One-to-many transfer (HCCL-broadcast analogue used by NPU-fork,
         §6.2). Simulated time is a single traversal (tree broadcast) rather
-        than N sequential sends."""
+        than N sequential sends; every destination's clock advances by it."""
         backend = backend or self.default_backend
         spec = BACKENDS[backend]
-        out = []
+        t0 = time.monotonic()
         n = _nbytes(src.payload)
         for d in dsts:
             if d.deliver is not None:
                 d.deliver(src.payload)
-            out.append(Transfer(next(_xfer_ids), n, backend, 0.0, 0.0))
-        import math
-        fanout_penalty = 1.0 + 0.1 * max(0, math.ceil(math.log2(max(len(dsts), 1))))
-        sim = spec["lat"] + (n / spec["bw"]) * fanout_penalty
+        wall = time.monotonic() - t0
+        sim = spec["lat"] + (n / spec["bw"]) * _fanout_penalty(len(dsts))
         self.sim_clock += sim
-        for o in out:
-            o.sim_seconds = sim
+        out = []
+        for d in dsts:
+            peer = self.peers.get(d.owner)
+            if peer is not None and peer is not self:
+                peer.sim_clock += sim
+            out.append(Transfer(next(_xfer_ids), n, backend, sim, wall))
+        self.log.extend(out)
         return out
+
+    # -------------------------------------------------------- data (v2)
+    def transfer_sharded(self, kv: Dict[str, Any], dst_owner: str, *,
+                         dst_sharding: Any = None, src_tp: int = 1,
+                         dst_tp: int = 1, layer_chunks: int = 4,
+                         backend: Optional[str] = None) -> MigrationHandle:
+        """Device-resident shard-aware page-run transfer (DistFlow v2).
+
+        ``kv`` holds sharded ``jax.Array`` runs ``{"k","v"}`` of shape
+        (L, NP_run, P, Hkv, hd); they are split into ``layer_chunks``
+        layer-contiguous chunks, each ``jax.device_put`` to ``dst_sharding``
+        (the destination mesh's pool sharding — the reshard happens in
+        flight when src_tp ≠ dst_tp). ICI time is priced per parallel link:
+        min(src_tp, dst_tp) links each carry bytes/links. Returns an async
+        ``MigrationHandle``; nothing blocks until its ``wait()``.
+        """
+        import jax
+        backend = backend or self.default_backend
+        t0 = time.monotonic()
+        k, v = kv["k"], kv["v"]
+        n_layers = int(k.shape[0])
+        step = max(1, -(-n_layers // max(1, layer_chunks)))
+        chunks: List[Tuple[int, Any, Any]] = []
+        for l0 in range(0, n_layers, step):
+            kc = k[l0:l0 + step] if step < n_layers else k
+            vc = v[l0:l0 + step] if step < n_layers else v
+            if dst_sharding is not None:
+                kc = jax.device_put(kc, dst_sharding)
+                vc = jax.device_put(vc, dst_sharding)
+            chunks.append((l0, kc, vc))
+        links = max(1, min(src_tp, dst_tp)) if backend == "ici" else 1
+        xfer = self.charge(_nbytes([k, v]), backend, links=links,
+                           peer_owners=(dst_owner,),
+                           wall=time.monotonic() - t0, done=False)
+        return MigrationHandle(xfer=xfer, chunks=chunks)
 
     def _pick_backend(self, src: BufferInfo, dst: BufferInfo) -> str:
         if src.tier == "dram" and dst.tier == "npu":

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.engine.distflow import BufferInfo, DistFlow
+from repro.engine.distflow import BufferInfo, DistFlow, _nbytes
 from repro.engine.kv_cache import OutOfPagesError, PagedKVPool, pages_needed
 from repro.engine.model_runner import (PagedRunner, SequenceState, SlotRunner,
                                        pick_runner)
@@ -70,6 +70,7 @@ class Completion:
 class EngineConfig:
     mode: str = "colocated"             # colocated | prefill | decode
     tp: int = 1                         # model-axis width of the TE's mesh
+    device_offset: int = 0              # first device of the TE's 1×tp window
     n_pages: int = 256
     page_size: int = 16
     n_slots: int = 8                    # SlotRunner slots
@@ -100,7 +101,7 @@ class FlowServe:
         self.mesh = None
         if ecfg.tp > 1:
             from repro.launch.mesh import make_engine_mesh
-            self.mesh = make_engine_mesh(ecfg.tp)
+            self.mesh = make_engine_mesh(ecfg.tp, offset=ecfg.device_offset)
 
         if self.runner_kind == "paged":
             kv_sharding = None
@@ -116,7 +117,6 @@ class FlowServe:
                                       mesh=self.mesh)
         else:
             self.pool = None
-            self.rtc = RelationalTensorCache.__new__(RelationalTensorCache)  # placeholder
             self.rtc = None
             self.runner = SlotRunner(bundle, params, ecfg.n_slots, ecfg.max_len,
                                      ecfg.dtype, mesh=self.mesh)
@@ -136,6 +136,30 @@ class FlowServe:
         self.decode_steps = 0            # steps that executed a decode batch
         self.sampler_dispatches = 0      # device dispatches spent sampling
         self.sample_params: Dict[str, SamplingParams] = {}
+
+    # ---------------------------------------------------------------- scaling
+    @classmethod
+    def fork_from(cls, source: "FlowServe", ecfg: EngineConfig,
+                  name: str = "te-fork", link: str = "ici") -> "FlowServe":
+        """NPU-fork (§6.3): bring up a new TE by forking weights PER-SHARD
+        from a live (possibly sharded) TE onto the new TE's own mesh —
+        replacing re-initialization / host reload. Each destination shard
+        fills via ``jax.device_put`` from the source's resident params (the
+        ICI-broadcast analogue; ``link="dcn"`` prices the scale-out
+        fallback); DistFlow charges both endpoints. The new TE is linked
+        into the source's peer group."""
+        from repro.core.scaling import npu_fork_live
+        from repro.launch.mesh import make_engine_mesh
+        dst_mesh = make_engine_mesh(ecfg.tp, offset=ecfg.device_offset) \
+            if ecfg.tp > 1 else None
+        params, lr = npu_fork_live(
+            source.runner.params, source.cfg, dst_mesh,
+            source=source.distflow, link=link,
+            dst_device=jax.devices()[ecfg.device_offset])
+        te = cls(source.bundle, params, ecfg, name=name)
+        source.distflow.link_cluster([te.distflow])
+        te.distflow.sim_clock += lr.seconds   # the fork target observed it too
+        return te
 
     # ---------------------------------------------------------------- API
     def add_request(self, req: Request) -> str:
@@ -208,6 +232,10 @@ class FlowServe:
                 # to another sequence — writing would corrupt it)
                 live = [s for s in live if s in self.scheduler.running]
             if live:
+                for s in live:
+                    handle = s.extra.pop("_kv_pending", None)
+                    if handle is not None:   # first decode of a migrated seq
+                        self.runner.import_kv(handle.wait(), s.pages)
                 logits = self.runner.decode(live)
                 self.decode_steps += 1
                 # async scheduling: the next plan depends only on counts —
@@ -237,15 +265,70 @@ class FlowServe:
         self._prefill_done_buffer = []
         return out
 
-    def export_kv(self, req_id: str):
+    def export_kv(self, req_id: str, host_gather: bool = False):
         """P-mode: KV of the first n_prompt-1 tokens; the decode TE runs the
-        last prompt token as its first decode step (by-req transfer, §4.5)."""
+        last prompt token as its first decode step (by-req transfer, §4.5).
+        Default payload is device-resident sharded arrays (DistFlow v2);
+        ``host_gather=True`` keeps the v1 numpy round-trip."""
         seq = self._seqs[req_id]
-        payload = self.runner.export_kv(seq)
+        payload = self.runner.export_kv(seq, host_gather=host_gather) \
+            if self.runner_kind == "paged" else self.runner.export_kv(seq)
         payload["req_id"] = req_id
         payload["sampling"] = self.sample_params[req_id]
         payload["arrival"] = self._requests[req_id].arrival
         return payload
+
+    def migrate_out(self, req_id: str, dst: "FlowServe", overlap: bool = True,
+                    layer_chunks: int = 4, host_gather: bool = False,
+                    keep_prefix: bool = True) -> str:
+        """Move a prefilled request's KV/state to decode TE ``dst`` over
+        DistFlow and release it here (by-request PD migration, §4.5).
+
+        Paged path (v2): sharded page runs travel device-to-device, priced
+        bytes/links per parallel ICI link and resharded in flight when the
+        TEs' tp differ. With ``overlap=True`` the import is asynchronous:
+        ``dst`` keeps stepping its live batch while the KV chunks stream in,
+        and blocks only at its first decode of the migrated sequence.
+        ``host_gather=True`` forces the v1 host round-trip (benchmarks).
+        Slot (recurrent-state) payloads use the v1 path: their state is
+        O(pages) smaller, so the host hop is not a hot path.
+        """
+        payload = self.export_kv(req_id, host_gather=host_gather)
+        if self.runner_kind != "paged" or host_gather:
+            if host_gather and self.runner_kind == "paged":
+                # the v1 path is a genuine host round-trip: price the DtoH
+                # gather (here) and the HtoD pool rewrite (on dst) that the
+                # device-resident path never pays
+                n_kv = _nbytes([payload["k"], payload["v"]])
+                self.distflow.charge(n_kv, "pcie_dram")
+            self.distflow.transfer(
+                BufferInfo(owner=self.name, tier="npu", payload=payload),
+                BufferInfo(owner=dst.name, tier="npu",
+                           deliver=dst.import_request))
+            if host_gather and self.runner_kind == "paged":
+                dst.distflow.charge(n_kv, "pcie_dram")
+        else:
+            kv = {"k": payload.pop("k"), "v": payload.pop("v")}
+            handle = self.distflow.transfer_sharded(
+                kv, dst.name, dst_sharding=dst.pool.run_sharding(),
+                src_tp=self.ecfg.tp, dst_tp=dst.ecfg.tp,
+                layer_chunks=layer_chunks)
+            payload["kv_handle"] = handle
+            dst.import_request(payload)
+            if not overlap:
+                dst.finish_pending_imports()
+        # keep_prefix=True preserves the prefill prefix in this TE's RTC so
+        # later shared-prefix requests skip the recompute (§4.3)
+        self.release_request(req_id, keep_prefix=keep_prefix)
+        return req_id
+
+    def finish_pending_imports(self) -> None:
+        """D-mode: synchronously drain every deferred KV import (the eager
+        complement of the decode-time lazy wait)."""
+        for seq in self._seqs.values():
+            handle = seq.extra.pop("_kv_pending", None)
+            if handle is not None:
+                self.runner.import_kv(handle.wait(), seq.pages)
 
     def release_request(self, req_id: str, keep_prefix: bool = True) -> None:
         seq = self._seqs.pop(req_id, None)
@@ -284,11 +367,28 @@ class FlowServe:
         self._requests[req.req_id] = req
         self.sample_params[req.req_id] = req.sampling
         if self.runner_kind == "paged":
-            n_pages = payload["k"].shape[1]
+            n_pages = payload.get("n_pages")
+            if n_pages is None:
+                n_pages = payload["k"].shape[1]
             seq.pages = self.pool.alloc(n_pages)
-            self.runner.import_kv(payload, seq.pages)
+            handle = payload.get("kv_handle")
+            if handle is not None:
+                # async migration (DistFlow v2): KV chunks are still in
+                # flight — decode other sequences freely; the first decode
+                # step touching THIS sequence waits and scatters.
+                seq.extra["_kv_pending"] = handle
+            else:
+                self.runner.import_kv(payload, seq.pages)
         else:
-            self.runner.alloc_slot(seq)
+            if not self.runner.alloc_slot(seq):
+                # same backpressure signal as the paged path's pool.alloc —
+                # callers gate migrations on destination capacity
+                self._seqs.pop(req.req_id, None)
+                self._requests.pop(req.req_id, None)
+                self.sample_params.pop(req.req_id, None)
+                raise OutOfPagesError(
+                    f"decode TE {self.name} has no free slot for migrated "
+                    f"request {req.req_id}")
             self.runner.import_kv(payload, seq)
         self.scheduler.running.append(seq)
         return req.req_id
@@ -325,6 +425,9 @@ class FlowServe:
         if shared:
             self.pool.release(shared, keep_cached=True)
         seq.reused_pages = 0
+        # a not-yet-imported migration is void: its pages were just released
+        # and requeue re-prefills from scratch — never scatter the stale run
+        seq.extra.pop("_kv_pending", None)
         self.scheduler.requeue(seq)
 
     def _on_prefill_done(self, seq: SequenceState) -> None:

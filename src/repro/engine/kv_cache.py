@@ -12,11 +12,13 @@ DMAs on real hardware, device↔host copies here.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 
@@ -57,6 +59,10 @@ class PagedKVPool:
         # DRAM tier: handle -> (k_np, v_np) of shape (L, NP_run, P, Hkv, hd)
         self.dram: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
         self._dram_next = 0
+        # DistFlow v2 device path: cached jits + import instrumentation
+        self._gather_jit = None
+        self._scatter_jits: Dict[int, Any] = {}   # layer_start -> jit
+        self.full_pool_copies = 0   # un-donated whole-pool rewrites (v1 path)
 
     # ------------------------------------------------------------- alloc
     def free_page_count(self) -> int:
@@ -117,6 +123,58 @@ class PagedKVPool:
     def gather(self, pages: List[int]) -> Tuple[jax.Array, jax.Array]:
         idx = jnp.asarray(pages, jnp.int32)
         return self.k[:, idx], self.v[:, idx]       # (L, NP_run, P, Hkv, hd)
+
+    # ---------------------------------------------------- DistFlow v2 data
+    # Page runs have the same rank as the pool (L, NP_run, P, Hkv, hd), so
+    # the pool's sharding spec applies to runs verbatim: runs stay sharded
+    # by whole KV heads over `model` end to end.
+
+    def run_sharding(self):
+        """Placement a page-run payload should have on this pool's mesh
+        (SingleDeviceSharding when the engine is unsharded)."""
+        return self.sharding if self.sharding is not None else self.k.sharding
+
+    def gather_device(self, pages: List[int]) -> Tuple[jax.Array, jax.Array]:
+        """Sharded device-resident gather of a page run — the DistFlow v2
+        export payload. One jit'd dispatch, shardings pinned pool→run; no
+        host copy anywhere."""
+        if self._gather_jit is None:
+            if self.sharding is not None:
+                repl = NamedSharding(self.sharding.mesh, P())
+                self._gather_jit = jax.jit(
+                    lambda k, v, i: (k[:, i], v[:, i]),
+                    in_shardings=(self.sharding, self.sharding, repl),
+                    out_shardings=(self.sharding, self.sharding))
+            else:
+                self._gather_jit = jax.jit(lambda k, v, i: (k[:, i], v[:, i]))
+        return self._gather_jit(self.k, self.v, jnp.asarray(pages, jnp.int32))
+
+    def scatter_run(self, pages: List[int], k_run: jax.Array, v_run: jax.Array,
+                    layer_start: int = 0) -> None:
+        """Import-side page-run scatter: ONE donated jit'd dispatch with
+        pinned in/out shardings — the pool is updated in place, never
+        rewritten through the host. ``layer_start`` supports layer-chunked
+        migration (the run covers layers [layer_start, layer_start+len))."""
+        fn = self._scatter_jits.get(layer_start)
+        if fn is None:
+            l0 = layer_start
+
+            def step(k, v, idx, k_run, v_run):
+                li = l0 + jnp.arange(k_run.shape[0], dtype=jnp.int32)
+                return (k.at[li[:, None], idx[None, :]].set(k_run),
+                        v.at[li[:, None], idx[None, :]].set(v_run))
+
+            if self.sharding is not None:
+                repl = NamedSharding(self.sharding.mesh, P())
+                fn = jax.jit(step, donate_argnums=(0, 1),
+                             in_shardings=(self.sharding, self.sharding, repl,
+                                           self.sharding, self.sharding),
+                             out_shardings=(self.sharding, self.sharding))
+            else:
+                fn = jax.jit(step, donate_argnums=(0, 1))
+            self._scatter_jits[layer_start] = fn
+        self.k, self.v = fn(self.k, self.v, jnp.asarray(pages, jnp.int32),
+                            k_run, v_run)
 
     # ------------------------------------------------------------- tiers
     def copy_to_dram(self, pages: List[int]) -> int:

@@ -232,17 +232,46 @@ class PagedRunner:
         return run
 
     # ------------------------------------------------------------ PD export
-    def export_kv(self, seq: SequenceState):
-        """DistFlow payload for PD-disaggregation: page run + metadata."""
-        k, v = self.pool.gather(seq.pages)
-        return {"k": np.asarray(k), "v": np.asarray(v),
-                "tokens": list(seq.tokens), "n_prompt": seq.n_prompt,
-                "n_cached": seq.n_cached}
+    def export_kv(self, seq: SequenceState, host_gather: bool = False):
+        """DistFlow payload for PD-disaggregation: page run + metadata.
+
+        Default (v2): the run stays a sharded ``jax.Array`` pair — one jit'd
+        gather, no host round-trip; DistFlow moves/reshards it device-to-
+        device. ``host_gather=True`` keeps the v1 numpy path (benchmark
+        baseline and DCN/pickle-style escape hatch)."""
+        meta = {"tokens": list(seq.tokens), "n_prompt": seq.n_prompt,
+                "n_cached": seq.n_cached, "n_pages": len(seq.pages)}
+        if host_gather:
+            k, v = self.pool.gather(seq.pages)
+            return {"k": np.asarray(k), "v": np.asarray(v),
+                    "host_gather": True, **meta}
+        k, v = self.pool.gather_device(seq.pages)
+        return {"k": k, "v": v, **meta}
 
     def import_kv(self, payload, pages: List[int]) -> None:
-        idx = jnp.asarray(pages, jnp.int32)
-        self.pool.k = self.pool.k.at[:, idx].set(jnp.asarray(payload["k"]))
-        self.pool.v = self.pool.v.at[:, idx].set(jnp.asarray(payload["v"]))
+        """Install a migrated page run. v2 payloads (device arrays or the
+        layer-chunked ``{"chunks": [...]}`` a MigrationHandle.wait() yields)
+        go through the donated jit'd scatter; v1 host payloads keep the
+        un-jitted full-pool rewrite for benchmark comparison."""
+        if payload.get("host_gather"):
+            idx = jnp.asarray(pages[:payload["k"].shape[1]], jnp.int32)
+            self.pool.k = self.pool.k.at[:, idx].set(jnp.asarray(payload["k"]))
+            self.pool.v = self.pool.v.at[:, idx].set(jnp.asarray(payload["v"]))
+            self.pool.full_pool_copies += 2          # k and v each rewritten
+            return
+        chunks = payload.get("chunks")
+        if chunks is None:
+            chunks = [(0, payload["k"], payload["v"])]
+        # the run covers the pages allocated at import time; a lazy (overlap)
+        # import may fire after _ensure_pages appended the next decode page
+        pages = pages[:chunks[0][1].shape[1]]
+        target = self.pool.run_sharding()
+        for l0, k_run, v_run in chunks:
+            # no-op when DistFlow already resharded onto this mesh; real
+            # placement change only for payloads that skipped transfer_sharded
+            k_run = jax.device_put(k_run, target)
+            v_run = jax.device_put(v_run, target)
+            self.pool.scatter_run(pages, k_run, v_run, layer_start=l0)
 
 
 # ===========================================================================

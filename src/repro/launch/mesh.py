@@ -33,18 +33,28 @@ def make_host_mesh(data: int = 1, model: int = 1):
     return _mk((data, model), ("data", "model"))
 
 
-def make_engine_mesh(tp: int):
+def make_engine_mesh(tp: int, offset: int = 0):
     """1×tp ("data","model") mesh for one FLOWSERVE TE: the TE's NPUs form a
     pure tensor-parallel SPMD group; data parallelism happens across TEs
     (the JE schedules requests over engines), never inside one (DESIGN.md §5).
+
+    ``offset`` places the TE on devices [offset, offset+tp) so co-resident
+    TEs (a PD pair, a fork source+target) occupy DISJOINT device windows and
+    DistFlow's cross-mesh reshards move between genuinely different device
+    sets (DESIGN.md §7).
     """
     n = jax.device_count()
-    if tp > n:
+    if offset + tp > n:
         raise RuntimeError(
-            f"EngineConfig.tp={tp} exceeds the visible device count {n}; "
-            "for simulated-host runs set XLA_FLAGS=--xla_force_host_platform_"
-            f"device_count={max(tp, 8)} before jax initializes")
-    return make_host_mesh(data=1, model=tp)
+            f"EngineConfig tp={tp} at device_offset={offset} exceeds the "
+            f"visible device count {n}; for simulated-host runs set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{max(offset + tp, 8)} before jax initializes")
+    if offset == 0:
+        return make_host_mesh(data=1, model=tp)
+    import numpy as np
+    devices = np.asarray(jax.devices()[offset:offset + tp]).reshape(1, tp)
+    return jax.sharding.Mesh(devices, ("data", "model"))
 
 
 def dp_axes(mesh) -> tuple:

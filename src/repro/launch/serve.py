@@ -80,13 +80,9 @@ def main() -> None:
                 break
             pe.step()
             for rid in pe.pop_migratable():
-                payload = pe.export_kv(rid)
-                from repro.engine.distflow import BufferInfo
-                pe.distflow.transfer(
-                    BufferInfo(owner=pe.name, tier="npu", payload=payload),
-                    BufferInfo(owner=de.name, tier="npu",
-                               deliver=lambda pl: de.import_request(pl)))
-                pe.release_request(rid)
+                # DistFlow v2: sharded device-resident page runs, resharded
+                # in flight when P/D tp differ; import overlaps with decode
+                pe.migrate_out(rid, de)
             comps.extend(de.step())
         print(f"PD-disaggregated: {len(comps)} completions; "
               f"KV moved {pe.distflow.bytes_moved()/1e6:.2f} MB")

@@ -227,6 +227,16 @@ def engine_kv_pool_sharding(cfg: ModelConfig, mesh) -> NamedSharding:
     return NamedSharding(mesh, spec)
 
 
+def engine_kv_run_sharding(cfg: ModelConfig, mesh) -> NamedSharding:
+    """Placement of a migrated page-run payload (L, NP_run, P, Hkv, hd) on a
+    destination TE's mesh — DistFlow v2's resharding rule (DESIGN.md §7).
+    Runs have the pool's rank, so the pool spec applies verbatim: when the
+    source and destination tp differ, ``jax.device_put`` onto this sharding
+    re-splits the KV heads in flight (e.g. P at tp=4 → D at tp=2 merges
+    adjacent head shards pairwise)."""
+    return engine_kv_pool_sharding(cfg, mesh)
+
+
 def engine_cache_shardings(cfg: ModelConfig, cache_like, mesh,
                            n_slots: int, max_len: int) -> Any:
     """SlotRunner dense caches: reuse cache_specs with an engine-shaped

@@ -5,7 +5,7 @@
 PYTEST   := PYTHONPATH=src python -m pytest
 XLA_HOST := XLA_FLAGS="--xla_force_host_platform_device_count=8"
 
-.PHONY: tier1 fast bench-tp bench-pd bench help
+.PHONY: tier1 fast bench-tp bench-pd bench-hotloop bench help
 
 tier1:  ## full tier-1 suite (ROADMAP.md verify command) on 8 simulated devices
 	$(XLA_HOST) $(PYTEST) -x -q
@@ -18,6 +18,9 @@ bench-tp:  ## tok/s for TP in {1,2,4} on simulated devices + sampler dispatches
 
 bench-pd:  ## PD KV-migration: host-gather v1 vs sharded device path at tp in {1,2,4}
 	PYTHONPATH=src python benchmarks/bench_pd_migration.py
+
+bench-hotloop:  ## decode hot loop: v1 host-driven vs v2 fused/multi-step at tp in {1,2,4}
+	PYTHONPATH=src python benchmarks/bench_decode_hotloop.py
 
 bench:  ## full paper-figure benchmark harness (XLA_HOST so tp_engine gets devices)
 	$(XLA_HOST) PYTHONPATH=src python -m benchmarks.run

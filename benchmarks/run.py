@@ -1,12 +1,17 @@
 """Benchmark harness: one module per paper table/figure (DESIGN.md §6).
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows; ``--json`` additionally
+appends each key's rows to ``BENCH_<key>.json`` (a history list, one entry
+per run) so the perf trajectory is tracked in-repo.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig3,fig6,...]
+    PYTHONPATH=src python -m benchmarks.run [--only fig3,fig6,...] [--json]
 """
 from __future__ import annotations
 
 import argparse
+import datetime
 import importlib
+import json
+import os
 import sys
 import time
 
@@ -23,13 +28,37 @@ MODULES = [
     ("roofline", "benchmarks.bench_roofline"),
     ("tp_engine", "benchmarks.bench_tp_engine"),
     ("pd_migration", "benchmarks.bench_pd_migration"),
+    ("decode_hotloop", "benchmarks.bench_decode_hotloop"),
 ]
+
+
+def _persist_json(key: str, rows: list, wall_s: float, out_dir: str) -> None:
+    path = os.path.join(out_dir, f"BENCH_{key}.json")
+    history = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                history = json.load(f).get("history", [])
+        except (json.JSONDecodeError, OSError):
+            history = []
+    history.append({
+        "ts": datetime.datetime.now(datetime.timezone.utc)
+        .isoformat(timespec="seconds"),
+        "wall_s": round(wall_s, 3),
+        "rows": [{"name": n, "value": v, "derived": d} for n, v, d in rows],
+    })
+    with open(path, "w") as f:
+        json.dump({"key": key, "history": history}, f, indent=1)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated bench keys (e.g. fig3,fig6)")
+    ap.add_argument("--json", action="store_true",
+                    help="append results to BENCH_<key>.json per bench key")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for BENCH_<key>.json (default: cwd)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -46,10 +75,13 @@ def main() -> None:
             print(f"{key}_ERROR,0,{e!r}")
             failures += 1
             continue
+        wall = time.monotonic() - t0
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")
-        print(f"{key}_wall_s,{(time.monotonic() - t0) * 1e6:.0f},")
+        print(f"{key}_wall_s,{wall * 1e6:.0f},")
         sys.stdout.flush()
+        if args.json:
+            _persist_json(key, rows, wall, args.json_dir)
     if failures:
         sys.exit(1)
 

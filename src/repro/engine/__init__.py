@@ -1,3 +1,4 @@
 from repro.engine.flowserve import FlowServe, EngineConfig, Request, Completion  # noqa: F401
+from repro.engine.hotloop import DecodeHotState  # noqa: F401
 from repro.engine.sampling import SamplingParams  # noqa: F401
 from repro.engine.tokenizer import ByteTokenizer  # noqa: F401

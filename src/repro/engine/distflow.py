@@ -68,19 +68,55 @@ class Transfer:
 @dataclass
 class MigrationHandle:
     """Async sharded-KV migration. The chunk device_puts were already
-    dispatched (jax async dispatch), so the source is free immediately;
-    ``wait()`` blocks until every chunk has landed on the destination
-    devices and returns the scatter-ready payload
-    ``{"chunks": [(layer_start, k_run, v_run), ...]}``."""
+    dispatched (jax async dispatch), so the source is free immediately.
+
+    Completion is exposed at two granularities:
+      * ``wait()`` — block until EVERY chunk has landed; returns the
+        scatter-ready payload ``{"chunks": [(layer_start, k, v), ...]}``.
+      * ``wait_chunk(i)`` / ``chunk_ready(i)`` — per-layer ready events
+        (ROADMAP PR-2 follow-up): an importer can scatter each layer chunk
+        the moment IT lands, starting the migrated sequence's first decode
+        behind the FIRST chunk instead of the last. ``xfer.done`` flips
+        once the last outstanding chunk has been consumed either way.
+    """
     xfer: Transfer
     chunks: List[Tuple[int, Any, Any]]
+    landed: List[bool] = None   # per-chunk ready events
+
+    def __post_init__(self):
+        if self.landed is None:
+            self.landed = [False] * len(self.chunks)
+
+    def wait_chunk(self, i: int) -> Tuple[int, Any, Any]:
+        """Block until chunk ``i`` (one contiguous layer slice) has landed
+        on the destination devices; returns that chunk alone."""
+        import jax
+        _, kc, vc = self.chunks[i]
+        jax.block_until_ready(kc)
+        jax.block_until_ready(vc)
+        self.landed[i] = True
+        if all(self.landed):
+            self.xfer.done = True
+        return self.chunks[i]
+
+    def chunk_ready(self, i: int) -> bool:
+        """Non-blocking per-layer ready probe."""
+        if self.landed[i]:
+            return True
+        _, kc, vc = self.chunks[i]
+        try:
+            ready = bool(kc.is_ready() and vc.is_ready())
+        except AttributeError:      # plain ndarray payloads are always ready
+            ready = True
+        if ready:
+            self.landed[i] = True
+            if all(self.landed):
+                self.xfer.done = True
+        return ready
 
     def wait(self) -> Dict[str, Any]:
-        import jax
-        for _, kc, vc in self.chunks:
-            jax.block_until_ready(kc)
-            jax.block_until_ready(vc)
-        self.xfer.done = True
+        for i in range(len(self.chunks)):
+            self.wait_chunk(i)
         return {"chunks": self.chunks}
 
     @property

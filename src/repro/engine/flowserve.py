@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import itertools
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
@@ -21,6 +22,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.engine.distflow import BufferInfo, DistFlow, _nbytes
+from repro.engine.hotloop import DecodeHotState, pow2s
 from repro.engine.kv_cache import OutOfPagesError, PagedKVPool, pages_needed
 from repro.engine.model_runner import (PagedRunner, SequenceState, SlotRunner,
                                        pick_runner)
@@ -80,6 +82,8 @@ class EngineConfig:
     chunk_size: int = 16
     enable_prefix_cache: bool = True
     async_sched: bool = True
+    fused_decode: bool = True           # NPU-centric hot loop (DESIGN.md §8)
+    decode_horizon: int = 8             # max fused multi-step K (1 = off)
     dtype: Any = jnp.float32
     seed: int = 0
 
@@ -133,9 +137,24 @@ class FlowServe:
         self._prefill_done_buffer: List[str] = []  # P-mode: ready to migrate
         self.steps = 0
         self.step_wall = 0.0
-        self.decode_steps = 0            # steps that executed a decode batch
-        self.sampler_dispatches = 0      # device dispatches spent sampling
+        self.decode_steps = 0            # decode iterations executed (B-wide)
+        self.sampler_dispatches = 0      # STANDALONE dispatches spent sampling
+        self.host_dispatches = 0         # device dispatches on the decode path
+        self.host_syncs = 0              # blocking device→host fetches
         self.sample_params: Dict[str, SamplingParams] = {}
+        # decode hot loop (DESIGN.md §8): persistent device-resident batch
+        # state, in-flight token blocks (fetched one horizon late), and the
+        # per-sequence count of sampled-but-uncommitted tokens
+        self._hot: Optional[DecodeHotState] = None
+        self._inflight: deque = deque()  # (tokens_dev, [(slot, seq_id)], K)
+        self._pending: Dict[str, int] = {}
+        self._completed_buf: List[Completion] = []
+        self._sp_cache: tuple = (None, None, None)  # batch-keyed temps/top_ps
+
+    @property
+    def jit_compiles(self) -> int:
+        """Decode-path jit cache misses (bucketed keys ⇒ 0 in steady state)."""
+        return getattr(self.runner, "jit_compiles", 0)
 
     # ---------------------------------------------------------------- scaling
     @classmethod
@@ -171,17 +190,25 @@ class FlowServe:
         self._seqs[req.req_id] = seq
         self._requests[req.req_id] = req
         self.sample_params[req.req_id] = req.sampling
+        # a reused req_id may carry different sampling params: the cached
+        # per-batch temps/top_ps arrays would alias the old request's
+        self._sp_cache = (None, None, None)
         if self.runner_kind == "slot" and self._state_cache is not None:
             self._try_state_reuse(seq)
         self.scheduler.admit(seq)
         return req.req_id
 
     def has_work(self) -> bool:
-        return self.scheduler.has_work()
+        return bool(self._inflight or self._completed_buf) \
+            or self.scheduler.has_work()
 
     def step(self) -> List[Completion]:
         """One engine iteration: (maybe prepared) plan → execute → sample →
-        commit → prepare next plan (async mode prepares before sampling)."""
+        commit → prepare next plan (async mode prepares before sampling).
+        With ``fused_decode`` a pure-decode step is ONE fused device
+        dispatch covering a K-step horizon; its token block is fetched a
+        horizon later, so completions surface with at most one extra step
+        of latency (DESIGN.md §8)."""
         t0 = time.monotonic()
         self.scheduler.resolve_prefix()
         self.scheduler.pump_prefetch()
@@ -189,6 +216,13 @@ class FlowServe:
             else self.scheduler.prepare_next()
         self._next_plan = None
         completions: List[Completion] = []
+        if self._inflight and (plan.prefill or not plan.decode):
+            # prefill page allocation may preempt a running (in-flight) seq —
+            # make host state authoritative before that can happen. And when
+            # the plan has NO decode batch (e.g. every sequence EOS-stopped
+            # in the previous block), the orphaned in-flight horizon must be
+            # committed here or nothing ever would.
+            self._drain_inflight()
 
         # ---------------- prefill chunks
         for seq, start, chunk in plan.prefill:
@@ -221,9 +255,14 @@ class FlowServe:
         if plan.decode:
             # drop seqs that finished or were preempted (requeued) after the
             # plan was (asynchronously) prepared
-            live = [s for s in plan.decode if s.seq_id in self._seqs
-                    and s in self.scheduler.running]
-            if live and self.runner_kind == "paged":
+            live = self._refilter(plan.decode)
+            fused = False
+            if live and self.runner_kind == "paged" and self.ecfg.fused_decode:
+                fused = self._decode_fused_step(live)
+            if not fused and live:
+                self._drain_inflight()
+                live = self._refilter(live)
+            if not fused and live and self.runner_kind == "paged":
                 for s in live:
                     if s in self.scheduler.running:  # not yet preempted
                         self._ensure_pages(s, len(s.tokens))
@@ -231,23 +270,27 @@ class FlowServe:
                 # NOT decode this step (their freed pages may already belong
                 # to another sequence — writing would corrupt it)
                 live = [s for s in live if s in self.scheduler.running]
-            if live:
+            if not fused and live:
                 for s in live:
                     handle = s.extra.pop("_kv_pending", None)
                     if handle is not None:   # first decode of a migrated seq
-                        self.runner.import_kv(handle.wait(), s.pages)
+                        self._import_layerwise(handle, s)
                 logits = self.runner.decode(live)
                 self.decode_steps += 1
+                self.host_dispatches += 1
                 # async scheduling: the next plan depends only on counts —
                 # prepare it *before* sampling commits token values (§4.2)
                 if self.ecfg.async_sched:
                     self._next_plan = self.scheduler.prepare_next()
-                completions.extend(self._commit_tokens(live, logits))
+                self._commit_tokens(live, logits)
+                if self._hot is not None:
+                    self._hot.reset()   # device rows are stale vs host now
 
         if self.ecfg.async_sched and self._next_plan is None:
             self._next_plan = self.scheduler.prepare_next()
         self.steps += 1
         self.step_wall += time.monotonic() - t0
+        completions.extend(self._flush_completed())
         return completions
 
     def run_to_completion(self, max_steps: int = 10000) -> List[Completion]:
@@ -257,6 +300,207 @@ class FlowServe:
                 break
             out.extend(self.step())
         return out
+
+    # ------------------------------------------------------- decode hot loop
+    def warmup_decode(self, max_pages: Optional[int] = None,
+                      horizons: Optional[List[int]] = None) -> int:
+        """Precompile the bucketed fused decode jits (the warmup pass of
+        DESIGN.md §8): every power-of-two batch bucket up to
+        ``max_decode_batch`` × every page bucket up to ``max_pages`` × every
+        power-of-two horizon up to ``decode_horizon``. Serving stays
+        recompile-free only for sequences within ``max_pages`` pages — pass
+        your workload's per-sequence worst case. The default (an even pool
+        split across the decode batch) keeps the grid affordable but a
+        single long sequence may exceed it and compile its bigger page
+        bucket on first growth. Returns the number of executables
+        compiled."""
+        if self.runner_kind != "paged" or not self.ecfg.fused_decode:
+            return 0
+        if max_pages is None:
+            max_pages = max(1, self.ecfg.n_pages
+                            // max(1, self.ecfg.max_decode_batch))
+        return self.runner.warmup_fused(
+            pow2s(self.ecfg.max_decode_batch), pow2s(max_pages),
+            horizons if horizons is not None
+            else pow2s(self.ecfg.decode_horizon))
+
+    def _refilter(self, seqs: List[SequenceState]) -> List[SequenceState]:
+        return [s for s in seqs if s.seq_id in self._seqs
+                and s in self.scheduler.running]
+
+    def _hot_state(self) -> DecodeHotState:
+        if self._hot is None:
+            sharding = None
+            if self.mesh is not None:
+                from repro.launch.sharding import engine_decode_state_sharding
+                sharding = engine_decode_state_sharding(self.mesh)
+            self._key, sub = jax.random.split(self._key)
+            self._hot = DecodeHotState(self.pool, sharding=sharding, key=sub)
+        return self._hot
+
+    def _decode_fused_step(self, live: List[SequenceState]) -> bool:
+        """One NPU-centric decode iteration (DESIGN.md §8): sync the
+        persistent device state (zero dispatches in steady state), run a
+        K-step fused decode+sample horizon as ONE dispatch, and fetch the
+        PREVIOUS horizon's token block — committed one horizon late so the
+        fetch is asynchronous. Returns False when the fused path cannot run
+        (page pressure that needs preemption); the caller falls back to the
+        legacy per-step path."""
+        ps = self.pool.page_size
+        for _ in range(3):   # a drain restarts the attempt; converges
+            if not live:
+                return True
+            hlen = {s.seq_id: len(s.tokens) + self._pending.get(s.seq_id, 0)
+                    for s in live}
+            rem = {s.seq_id: self.sample_params[s.seq_id].max_new_tokens
+                   - (hlen[s.seq_id] - s.n_prompt) for s in live}
+            if min(rem.values()) < 1:
+                # a stop is already sitting in an uncommitted block: commit,
+                # let the finish release pages, retry with the survivors
+                self._drain_inflight()
+                live = self._refilter(live)
+                continue
+            # horizon the scheduler can prove, floored to a pow2 bucket,
+            # then shrunk until the page growth fits WITHOUT preemption
+            k = self.scheduler.safe_horizon(live, self.ecfg.decode_horizon,
+                                            min(rem.values()))
+            k = 1 << (max(1, k).bit_length() - 1)
+            free = self.pool.free_page_count() + len(self.pool.reclaimable())
+            if self.pool._scratch < 0:
+                free -= 1                  # the hot state will pin one page
+            while k >= 1:
+                need = sum(max(0, pages_needed(hlen[s.seq_id] + k, ps)
+                               - len(s.pages)) for s in live)
+                if need <= free:
+                    break
+                k //= 2
+            if k < 1:
+                self._drain_inflight()
+                return False               # legacy path may preempt
+            try:
+                hot = self._hot_state()
+                for s in live:
+                    self._ensure_pages_no_preempt(s, hlen[s.seq_id] + k)
+            except OutOfPagesError:
+                self._drain_inflight()
+                return False
+            rows2 = [(s.seq_id, len(s.pages)) for s in live]
+            if self._inflight and (hot.needs_rebuild(rows2)
+                                   or hot.oversized(rows2)):
+                # bucket regrow — or a ≥2x shrink that would otherwise pay
+                # padded-row compute every step — rebuilds rows from host
+                # values, which is only coherent once nothing is pending
+                self._drain_inflight()
+                live = self._refilter(live)
+                continue
+            for s in live:
+                handle = s.extra.pop("_kv_pending", None)
+                if handle is not None:   # first decode of a migrated seq
+                    self._import_layerwise(handle, s)
+            self.host_dispatches += hot.sync(
+                [(s.seq_id, s.pages, len(s.tokens),
+                  s.tokens[-1] if s.tokens else 0,
+                  self.sample_params[s.seq_id].temperature,
+                  self.sample_params[s.seq_id].top_p) for s in live],
+                can_shrink=not self._inflight)
+            toks = self.runner.decode_fused(hot, k)
+            self.host_dispatches += 1
+            self.decode_steps += k
+            for s in live:
+                self._pending[s.seq_id] = \
+                    self._pending.get(s.seq_id, 0) + k
+            self._inflight.append(
+                (toks, [(hot.slot_of[s.seq_id], s.seq_id) for s in live], k))
+            # async scheduling (§4.2): the next plan needs only counts
+            if self.ecfg.async_sched:
+                self._next_plan = self.scheduler.prepare_next()
+            # fetch the PREVIOUS horizon's block — computed behind the
+            # dispatch above, so the copy does not stall the device
+            while len(self._inflight) > 1:
+                self._commit_oldest()
+            return True
+        return False
+
+    def _commit_oldest(self) -> None:
+        """Materialize the oldest in-flight token block and commit it:
+        append tokens, record TTFT, and finish sequences whose EOS /
+        max_new_tokens stop fired (post-stop tokens — sampled because EOS is
+        checked one horizon late — are discarded)."""
+        toks_dev, rows, k = self._inflight.popleft()
+        try:
+            ready = bool(toks_dev.is_ready())
+        except AttributeError:
+            ready = False
+        if not ready:
+            self.host_syncs += 1
+        toks = np.asarray(toks_dev)
+        for slot, sid in rows:
+            seq = self._seqs.get(sid)
+            if seq is None or sid not in self._pending:
+                continue   # finished by an earlier block's late EOS
+            sp = self.sample_params[sid]
+            stopped = False
+            for j in range(k):
+                tok = int(toks[j, slot])
+                seq.tokens.append(tok)
+                self._pending[sid] -= 1
+                if self._ttft.get(sid, 0.0) == 0.0:
+                    self._ttft[sid] = \
+                        time.monotonic() - self._requests[sid].arrival
+                n_new = len(seq.tokens) - seq.n_prompt
+                if (sp.stop_on_eos and tok == EOS_ID) \
+                        or n_new >= sp.max_new_tokens:
+                    stopped = True
+                    break
+            seq.n_cached = len(seq.tokens) - 1
+            if stopped:
+                self._pending.pop(sid, None)
+                req = self._requests[sid]
+                self._completed_buf.append(Completion(
+                    req_id=sid, tokens=seq.tokens[seq.n_prompt:],
+                    ttft=self._ttft[sid], finish=time.monotonic(),
+                    arrival=req.arrival, n_prompt=seq.n_prompt))
+                self.scheduler.on_finished(seq)
+                # releasing pages now is safe even with a later block in
+                # flight: pool updates chain by dispatch order, and any new
+                # owner of these pages writes (and masks) before it reads
+                self.release_request(sid)
+
+    def _drain_inflight(self) -> None:
+        """Commit every in-flight horizon — host state becomes
+        authoritative. Required before anything that reads or invalidates
+        sequence state: legacy decode, preemption, rebuilds, migration."""
+        while self._inflight:
+            self._commit_oldest()
+
+    def _flush_completed(self) -> List[Completion]:
+        out, self._completed_buf = self._completed_buf, []
+        return out
+
+    def _ensure_pages_no_preempt(self, seq: SequenceState,
+                                 n_tokens: int) -> None:
+        """Fused-path page growth: evicting cached prefixes is fine (the
+        RTC does that internally) but preemption is not — it would
+        invalidate in-flight horizons — so pressure raises and the caller
+        falls back to the legacy path."""
+        need = pages_needed(n_tokens, self.pool.page_size) - len(seq.pages)
+        for _ in range(max(0, need)):
+            seq.pages.append(self.rtc.append_block() if self.rtc
+                             else self.pool.alloc(1)[0])
+
+    def _import_layerwise(self, handle, seq: SequenceState) -> None:
+        """ROADMAP PR-2 follow-up: per-layer ready events. Each layer chunk
+        is scattered into the pool the moment IT lands
+        (``MigrationHandle.wait_chunk``), so a migrated sequence's first
+        decode starts behind the first chunk instead of the last — the
+        scatter of chunk i overlaps the wire time of chunk i+1."""
+        chunks = getattr(handle, "chunks", None)
+        if chunks is None:
+            self.runner.import_kv(handle.wait(), seq.pages)
+            return
+        for i in range(len(chunks)):
+            self.runner.import_kv({"chunks": [handle.wait_chunk(i)]},
+                                  seq.pages)
 
     # ---------------------------------------------------------------- PD
     def pop_migratable(self) -> List[str]:
@@ -270,6 +514,9 @@ class FlowServe:
         last prompt token as its first decode step (by-req transfer, §4.5).
         Default payload is device-resident sharded arrays (DistFlow v2);
         ``host_gather=True`` keeps the v1 numpy round-trip."""
+        # snapshot coherently: commit in-flight horizons so tokens/n_cached
+        # (and therefore the exported page run) reflect every sampled token
+        self._drain_inflight()
         seq = self._seqs[req_id]
         payload = self.runner.export_kv(seq, host_gather=host_gather) \
             if self.runner_kind == "paged" else self.runner.export_kv(seq)
@@ -328,10 +575,13 @@ class FlowServe:
         for seq in self._seqs.values():
             handle = seq.extra.pop("_kv_pending", None)
             if handle is not None:
-                self.runner.import_kv(handle.wait(), seq.pages)
+                self._import_layerwise(handle, seq)
 
     def release_request(self, req_id: str, keep_prefix: bool = True) -> None:
         seq = self._seqs.pop(req_id, None)
+        self._pending.pop(req_id, None)
+        if self._hot is not None:
+            self._hot.evict(req_id)   # a reused id must join fresh, not alias
         if seq is None:
             return
         if self.runner_kind == "paged" and seq.pages:
@@ -366,6 +616,7 @@ class FlowServe:
         self._seqs[req.req_id] = seq
         self._requests[req.req_id] = req
         self.sample_params[req.req_id] = req.sampling
+        self._sp_cache = (None, None, None)   # same aliasing rule as add
         if self.runner_kind == "paged":
             n_pages = payload.get("n_pages")
             if n_pages is None:
@@ -419,6 +670,17 @@ class FlowServe:
         return None
 
     def _preempt(self, seq: SequenceState) -> None:
+        # commit in-flight horizons first: the victim may have uncommitted
+        # tokens, and requeue resets state the commits would corrupt
+        if self._inflight:
+            self._drain_inflight()
+            if seq.seq_id not in self._seqs \
+                    or (seq not in self.scheduler.running
+                        and seq not in self.scheduler.prefilling):
+                return   # the drain already finished (released) the victim
+        self._pending.pop(seq.seq_id, None)
+        if self._hot is not None:
+            self._hot.reset()   # victim's device row must not be reused
         own = seq.pages[seq.reused_pages:]
         shared = seq.pages[:seq.reused_pages]
         self.pool.release(own)
@@ -438,21 +700,29 @@ class FlowServe:
             self._prefill_done_buffer.append(seq.seq_id)
             self._ttft[seq.seq_id] = time.monotonic() - self._requests[seq.seq_id].arrival
 
-    def _commit_tokens(self, seqs: List[SequenceState], logits
-                       ) -> List[Completion]:
-        """Sample the whole decode batch in ONE vmapped device dispatch (one
-        PRNG split per step, not one fold_in per sequence), then commit
-        tokens / completions on the host."""
+    def _commit_tokens(self, seqs: List[SequenceState], logits) -> None:
+        """Legacy (non-fused) sampling: the whole decode batch in ONE
+        vmapped device dispatch (one PRNG split per step, not one fold_in
+        per sequence), then commit tokens / completions on the host. The
+        per-batch temperature/top_p arrays are cached keyed on the batch
+        composition — join/finish/preempt changes the key, which is the
+        invalidation."""
         self._key, sub = jax.random.split(self._key)
-        sps = [self.sample_params[s.seq_id] for s in seqs]
-        temps = np.asarray([sp.temperature for sp in sps], np.float32)
-        top_ps = np.asarray([sp.top_p for sp in sps], np.float32)
+        batch_key = tuple(s.seq_id for s in seqs)
+        if self._sp_cache[0] != batch_key:
+            sps = [self.sample_params[sid] for sid in batch_key]
+            self._sp_cache = (
+                batch_key,
+                np.asarray([sp.temperature for sp in sps], np.float32),
+                np.asarray([sp.top_p for sp in sps], np.float32))
+        _, temps, top_ps = self._sp_cache
         toks = np.asarray(sample_batch(logits, temps, top_ps, sub,
                                        self.cfg.vocab_size))
         self.sampler_dispatches += 1
-        completions = []
+        self.host_dispatches += 1
+        self.host_syncs += 1             # np.asarray blocks on this step
         for i, seq in enumerate(seqs):
-            sp = sps[i]
+            sp = self.sample_params[seq.seq_id]
             tok = int(toks[i])
             seq.tokens.append(tok)
             if seq.seq_id not in self._ttft or self._ttft[seq.seq_id] == 0.0:
@@ -460,13 +730,12 @@ class FlowServe:
             n_new = len(seq.tokens) - seq.n_prompt
             if (sp.stop_on_eos and tok == EOS_ID) or n_new >= sp.max_new_tokens:
                 req = self._requests[seq.seq_id]
-                completions.append(Completion(
+                self._completed_buf.append(Completion(
                     req_id=seq.seq_id, tokens=seq.tokens[seq.n_prompt:],
                     ttft=self._ttft[seq.seq_id], finish=time.monotonic(),
                     arrival=req.arrival, n_prompt=seq.n_prompt))
                 self.scheduler.on_finished(seq)
                 self.release_request(seq.seq_id)
-        return completions
 
     def _try_state_reuse(self, seq: SequenceState) -> None:
         """SSM prefix cache: longest state checkpoint whose token prefix

@@ -1,0 +1,242 @@
+"""Device-resident decode-batch state for the NPU-centric hot loop
+(DESIGN.md §8, PAPER §4.2 / Figure 3).
+
+The per-step host work of v1 decode — rebuilding the block table as a fresh
+``np.zeros``, re-materializing lengths / last tokens / sampling params, and
+blocking on the sampled ids — is replaced by ONE persistent set of device
+arrays that the fused decode jit carries forward:
+
+  * ``bt``       (Bb, Pb) int32 — bucketed block table; padding entries point
+                 at the pool's pinned scratch page so padded rows write KV
+                 into a sink nothing reads.
+  * ``lengths``  (Bb,) int32 — advanced IN-JIT each decode step.
+  * ``last_tok`` (Bb,) int32 — the fused sampler's output feeds the next
+                 step's embedding without leaving the device.
+  * ``active``   (Bb,) bool — real rows vs bucket padding.
+  * ``temps``/``top_ps`` (Bb,) f32 — per-row sampling params, written once
+                 when a sequence joins the batch.
+  * ``key``      — the PRNG key, split in-jit one step at a time.
+
+Buckets are powers of two (batch and page-count), so steady-state serving
+reuses a small, precompilable set of jit cache keys. Batch events — a
+sequence joining after prefill, leaving on finish/preempt, or growing a
+page — are applied as incremental scatter updates; a step with no event
+costs the host NOTHING but the single fused dispatch. Bucket growth (or an
+engine-declared ``reset``) rebuilds every row from host-authoritative
+values; the engine drains in-flight horizons first so host and device
+agree.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Row = Tuple[str, List[int], int, int, float, float]
+#     (seq_id, pages, length, last_tok, temperature, top_p)
+
+
+def pow2_bucket(n: int) -> int:
+    """Smallest power of two >= n (n >= 1)."""
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+def pow2s(cap: int) -> List[int]:
+    """Every power-of-two bucket up to (and including) pow2_bucket(cap) —
+    the jit keys a batch ramping from 1 to ``cap`` will visit."""
+    out, b = [], 1
+    while b <= pow2_bucket(max(1, cap)):
+        out.append(b)
+        b *= 2
+    return out
+
+
+class DecodeHotState:
+    """Persistent on-device decode-batch metadata + host-side slot map."""
+
+    def __init__(self, pool, sharding=None, key=None):
+        self.pool = pool
+        self.sharding = sharding            # replicated NamedSharding | None
+        self.scratch = pool.scratch_page()  # padding rows' KV write sink
+        self.bb = 0                         # batch bucket (rows)
+        self.pb = 0                         # page bucket (block-table cols)
+        self.seq_ids: List[Optional[str]] = []
+        self.npages: List[int] = []
+        self.slot_of: Dict[str, int] = {}
+        self.bt = self.lengths = self.last_tok = None
+        self.active = self.temps = self.top_ps = None
+        self.key = key if key is not None else jax.random.PRNGKey(0)
+        if sharding is not None:
+            self.key = jax.device_put(self.key, sharding)
+        self.event_dispatches = 0   # device scatters spent on batch events
+        self.rebuilds = 0
+        self._force_rebuild = True
+
+    # ------------------------------------------------------------ helpers
+    def _put(self, arr):
+        self.event_dispatches += 1
+        a = jnp.asarray(arr)
+        return jax.device_put(a, self.sharding) if self.sharding is not None \
+            else a
+
+    def _ev(self):
+        self.event_dispatches += 1
+
+    def reset(self) -> None:
+        """Declare the device rows stale (legacy-path decode ran, or a
+        preemption fired): the next sync rebuilds every row from host
+        values. The engine guarantees nothing is in flight by then."""
+        self._force_rebuild = True
+
+    def evict(self, seq_id: str) -> None:
+        """Release a sequence's row NOW (the engine calls this on finish /
+        release). sync()'s leave path only fires for ids that miss a later
+        batch, so without an explicit evict a request id REUSED as the next
+        batch's first member would alias the stale row — decoding with the
+        old lengths/last-token and writing KV through a block table whose
+        pages were already released. Deactivating the device row is safe
+        with a horizon in flight: the dispatched block captured the old
+        operands, and these scatters affect only future dispatches."""
+        slot = self.slot_of.pop(seq_id, None)
+        if slot is None:
+            return
+        self.seq_ids[slot] = None
+        self.npages[slot] = 0
+        self.active = self.active.at[slot].set(False); self._ev()
+        self.lengths = self.lengths.at[slot].set(1); self._ev()
+        self.bt = self.bt.at[slot, 0].set(self.scratch); self._ev()
+
+    # ------------------------------------------------------------ planning
+    def needs_rebuild(self, rows: List[Tuple[str, int]]) -> bool:
+        """rows: (seq_id, n_pages). True when the next sync cannot be
+        expressed as incremental scatters — bucket growth or a reset."""
+        if self._force_rebuild or self.bb == 0:
+            return True
+        if pow2_bucket(len(rows)) > self.bb:
+            return True
+        return max(n for _, n in rows) > self.pb
+
+    def oversized(self, rows: List[Tuple[str, int]]) -> bool:
+        """rows: (seq_id, n_pages). True when either bucket is ≥2x what the
+        batch needs — a shrink rebuild would pay for itself (padded rows
+        cost real compute every step). The engine drains in-flight horizons
+        to make the rebuild coherent, then syncs with can_shrink=True."""
+        if self.bb == 0:
+            return False
+        return (pow2_bucket(len(rows)) <= self.bb // 2
+                or pow2_bucket(max(n for _, n in rows)) <= self.pb // 2)
+
+    # ------------------------------------------------------------ sync
+    def sync(self, rows: List[Row], can_shrink: bool = False) -> int:
+        """Reconcile the device state with the batch the engine is about to
+        dispatch. Host-provided length/last_tok are honored only for JOINING
+        rows (their pending count is zero by construction); existing rows'
+        carried state is device-authoritative. Returns the number of device
+        dispatches spent (0 in steady state).
+
+        ``can_shrink=True`` (engine passes it when nothing is in flight, so
+        the rebuild is free of drains) lets over-wide buckets from an earlier
+        bigger batch snap back: ≥2x oversize on either axis triggers a
+        rebuild at the exact power-of-two need, whose smaller jit key is
+        already compiled from the way up. Without it a ramp-down batch would
+        keep paying padded-row compute forever."""
+        ev0 = self.event_dispatches
+        rows2 = [(r[0], len(r[1])) for r in rows]
+        if (can_shrink and self.oversized(rows2)) or self.needs_rebuild(rows2):
+            self._rebuild(rows)
+            return self.event_dispatches - ev0
+        incoming = {r[0] for r in rows}
+        leave = [i for i, sid in enumerate(self.seq_ids)
+                 if sid is not None and sid not in incoming]
+        if leave:
+            for i in leave:
+                del self.slot_of[self.seq_ids[i]]
+                self.seq_ids[i] = None
+                self.npages[i] = 0
+            idx = jnp.asarray(leave, jnp.int32)
+            self.active = self.active.at[idx].set(False); self._ev()
+            self.lengths = self.lengths.at[idx].set(1); self._ev()
+            # park the freed row's per-step KV write on the scratch sink
+            self.bt = self.bt.at[idx, 0].set(self.scratch); self._ev()
+        joins, extends = [], []
+        for r in rows:
+            slot = self.slot_of.get(r[0])
+            if slot is None:
+                joins.append(r)
+            elif len(r[1]) != self.npages[slot]:
+                extends.append((slot, r[1]))
+        if joins:
+            slots, bt_rows = [], []
+            for sid, pages, *_ in joins:
+                i = self.seq_ids.index(None)
+                self.seq_ids[i] = sid
+                self.npages[i] = len(pages)
+                self.slot_of[sid] = i
+                slots.append(i)
+                row = np.full((self.pb,), self.scratch, np.int32)
+                row[:len(pages)] = pages
+                bt_rows.append(row)
+            idx = jnp.asarray(slots, jnp.int32)
+            self.bt = self.bt.at[idx].set(jnp.asarray(np.stack(bt_rows)))
+            self._ev()
+            self.lengths = self.lengths.at[idx].set(
+                jnp.asarray([r[2] for r in joins], jnp.int32)); self._ev()
+            self.last_tok = self.last_tok.at[idx].set(
+                jnp.asarray([r[3] for r in joins], jnp.int32)); self._ev()
+            self.active = self.active.at[idx].set(True); self._ev()
+            self.temps = self.temps.at[idx].set(
+                jnp.asarray([r[4] for r in joins], jnp.float32)); self._ev()
+            self.top_ps = self.top_ps.at[idx].set(
+                jnp.asarray([r[5] for r in joins], jnp.float32)); self._ev()
+        if extends:
+            # ALL page appends this step land in one scatter dispatch
+            ridx, cidx, vals = [], [], []
+            for slot, pages in extends:
+                old = self.npages[slot]
+                for c in range(old, len(pages)):
+                    ridx.append(slot)
+                    cidx.append(c)
+                    vals.append(pages[c])
+                self.npages[slot] = len(pages)
+            self.bt = self.bt.at[jnp.asarray(ridx, jnp.int32),
+                                 jnp.asarray(cidx, jnp.int32)].set(
+                jnp.asarray(vals, jnp.int32)); self._ev()
+        return self.event_dispatches - ev0
+
+    # ------------------------------------------------------------ rebuild
+    def _rebuild(self, rows: List[Row]) -> None:
+        """Full row reconstruction from host-authoritative values (bucket
+        growth, shrink, or reset) at the exact power-of-two buckets the
+        batch needs. Old buckets' compiled jits stay cached, so revisiting
+        a bucket never recompiles."""
+        self._force_rebuild = False
+        self.rebuilds += 1
+        self.bb = pow2_bucket(len(rows))
+        self.pb = pow2_bucket(max(len(r[1]) for r in rows))
+        bt = np.full((self.bb, self.pb), self.scratch, np.int32)
+        lengths = np.ones((self.bb,), np.int32)
+        last_tok = np.zeros((self.bb,), np.int32)
+        active = np.zeros((self.bb,), bool)
+        temps = np.zeros((self.bb,), np.float32)
+        top_ps = np.ones((self.bb,), np.float32)
+        self.seq_ids = [None] * self.bb
+        self.npages = [0] * self.bb
+        self.slot_of = {}
+        for i, (sid, pages, length, tok, temp, top_p) in enumerate(rows):
+            self.seq_ids[i] = sid
+            self.npages[i] = len(pages)
+            self.slot_of[sid] = i
+            bt[i, :len(pages)] = pages
+            lengths[i] = length
+            last_tok[i] = tok
+            active[i] = True
+            temps[i] = temp
+            top_ps[i] = top_p
+        self.bt = self._put(bt)
+        self.lengths = self._put(lengths)
+        self.last_tok = self._put(last_tok)
+        self.active = self._put(active)
+        self.temps = self._put(temps)
+        self.top_ps = self._put(top_ps)

@@ -63,10 +63,20 @@ class PagedKVPool:
         self._gather_jit = None
         self._scatter_jits: Dict[int, Any] = {}   # layer_start -> jit
         self.full_pool_copies = 0   # un-donated whole-pool rewrites (v1 path)
+        self._scratch: int = -1     # hot-loop padding sink (DESIGN.md §8)
 
     # ------------------------------------------------------------- alloc
     def free_page_count(self) -> int:
         return len(self._free)
+
+    def scratch_page(self) -> int:
+        """Permanently-pinned sink page for the decode hot loop's bucket
+        padding (DESIGN.md §8): padding rows of a bucketed block table point
+        here, so their per-step KV write lands in a page nothing ever reads
+        instead of corrupting live sequences. Allocated once, never freed."""
+        if self._scratch < 0:
+            self._scratch = self.alloc(1)[0]
+        return self._scratch
 
     def alloc(self, n: int) -> List[int]:
         if len(self._free) < n:

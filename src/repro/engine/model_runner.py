@@ -89,6 +89,12 @@ class PagedRunner:
         self._wins = [int(w) for w in np.asarray(T.window_schedule(self.cfg))]
         self._decode_fns: Dict[int, Any] = {}
         self._prefill_fns: Dict[Tuple[int, int], Any] = {}
+        # decode hot loop (DESIGN.md §8): bucketed fused decode+sample jits,
+        # keyed (k_steps, batch_bucket, page_bucket); jit_compiles counts
+        # decode-path cache misses so the engine can assert zero recompiles
+        # in steady state after the warmup pass.
+        self._fused_fns: Dict[Tuple[int, int, int], Any] = {}
+        self.jit_compiles = 0
 
     def _jit_step(self, fn, donate: Tuple[int, ...]):
         """jit with TP shardings pinned when the runner spans a mesh:
@@ -120,49 +126,152 @@ class PagedRunner:
             s.n_cached = len(s.tokens)
         return logits
 
-    def _decode_fn(self, maxp: int):
-        if maxp in self._decode_fns:
-            return self._decode_fns[maxp]
+    def _decode_body(self, params, tokens, bt, lengths, k_pool, v_pool):
+        """Traceable single decode step: (B,) token ids + device metadata →
+        (B, Vp) logits + updated pools. Shared by the legacy per-step jit and
+        the fused decode+sample horizon (DESIGN.md §8)."""
         cfg = self.cfg
         wins = self._wins
         ps = self.pool.page_size
+        b = tokens.shape[0]
+        x = T.embed(cfg, params, tokens[:, None])
+        pos = (lengths - 1)[:, None]
+        bidx = jnp.arange(b)
+        page = bt[bidx, (lengths - 1) // ps]
+        slot = (lengths - 1) % ps
+        for li in range(cfg.n_layers):
+            p = jax.tree.map(lambda a: a[li], params["blocks"])
+            h = L.apply_norm(x, p["ln1"], cfg.norm)
+            q, k_new, v_new = L.attn_qkv(p["attn"], h, cfg.n_heads,
+                                         cfg.n_kv_heads, cfg.head_dim,
+                                         pos, cfg.rope_theta, cfg.qk_norm)
+            k_pool = k_pool.at[li, page, slot].set(k_new[:, 0])
+            v_pool = v_pool.at[li, page, slot].set(v_new[:, 0])
+            win = wins[li] if wins[li] < T.GLOBAL_WINDOW else None
+            o = KREF.paged_attention_ref(q[:, 0], k_pool[li], v_pool[li],
+                                         bt, lengths,
+                                         softcap=cfg.attn_logit_softcap,
+                                         window=win)
+            x = x + S._post_attn(cfg, p, L.attn_out(p["attn"], o[:, None]))
+            h = L.apply_norm(x, p["ln2"], cfg.norm)
+            if "moe" in p:
+                from repro.models import moe as M
+                m = M.moe_apply(p["moe"], h, cfg.moe, cfg.mlp_act, groups=1)
+            else:
+                m = L.mlp_apply(p["mlp"], h, cfg.mlp_act)
+            if cfg.post_norms:
+                m = L.apply_norm(m, p["ln2_post"], cfg.norm)
+            x = x + m
+        logits = T.unembed(cfg, params, x)[:, 0]
+        return logits, k_pool, v_pool
+
+    def _decode_fn(self, maxp: int):
+        if maxp in self._decode_fns:
+            return self._decode_fns[maxp]
+        self.jit_compiles += 1
 
         def step(params, tokens, bt, lengths, k_pool, v_pool):
-            b = tokens.shape[0]
-            x = T.embed(cfg, params, tokens[:, None])
-            pos = (lengths - 1)[:, None]
-            bidx = jnp.arange(b)
-            page = bt[bidx, (lengths - 1) // ps]
-            slot = (lengths - 1) % ps
-            for li in range(cfg.n_layers):
-                p = jax.tree.map(lambda a: a[li], params["blocks"])
-                h = L.apply_norm(x, p["ln1"], cfg.norm)
-                q, k_new, v_new = L.attn_qkv(p["attn"], h, cfg.n_heads,
-                                             cfg.n_kv_heads, cfg.head_dim,
-                                             pos, cfg.rope_theta, cfg.qk_norm)
-                k_pool = k_pool.at[li, page, slot].set(k_new[:, 0])
-                v_pool = v_pool.at[li, page, slot].set(v_new[:, 0])
-                win = wins[li] if wins[li] < T.GLOBAL_WINDOW else None
-                o = KREF.paged_attention_ref(q[:, 0], k_pool[li], v_pool[li],
-                                             bt, lengths,
-                                             softcap=cfg.attn_logit_softcap,
-                                             window=win)
-                x = x + S._post_attn(cfg, p, L.attn_out(p["attn"], o[:, None]))
-                h = L.apply_norm(x, p["ln2"], cfg.norm)
-                if "moe" in p:
-                    from repro.models import moe as M
-                    m = M.moe_apply(p["moe"], h, cfg.moe, cfg.mlp_act, groups=1)
-                else:
-                    m = L.mlp_apply(p["mlp"], h, cfg.mlp_act)
-                if cfg.post_norms:
-                    m = L.apply_norm(m, p["ln2_post"], cfg.norm)
-                x = x + m
-            logits = T.unembed(cfg, params, x)[:, 0]
-            return logits, k_pool, v_pool
+            return self._decode_body(params, tokens, bt, lengths,
+                                     k_pool, v_pool)
 
         step = self._jit_step(step, donate=(4, 5))
         self._decode_fns[maxp] = step
         return step
+
+    # ---------------------------------------------- fused decode hot loop
+    def decode_fused(self, state, k_steps: int) -> jax.Array:
+        """NPU-centric decode (DESIGN.md §8): run ``k_steps`` decode+sample
+        iterations as ONE device dispatch over the persistent device-resident
+        batch state. Sampling is fused into the step — logits never leave the
+        device — and the carried metadata (lengths, last tokens, PRNG key)
+        advances in-jit, so the host's only job is this dispatch. Returns the
+        (k_steps, batch_bucket) sampled-token block WITHOUT materializing it
+        on the host; the caller fetches it asynchronously a horizon later."""
+        fn = self._decode_fused_fn(k_steps, state.bb, state.pb)
+        (toks, state.key, state.last_tok, state.lengths,
+         self.pool.k, self.pool.v) = fn(
+            self.params, state.bt, state.active, state.temps, state.top_ps,
+            state.key, state.last_tok, state.lengths,
+            self.pool.k, self.pool.v)
+        return toks
+
+    def _decode_fused_fn(self, k_steps: int, bb: int, pb: int):
+        key_t = (k_steps, bb, pb)
+        fn = self._fused_fns.get(key_t)
+        if fn is not None:
+            return fn
+        self.jit_compiles += 1
+        cfg = self.cfg
+        from repro.engine.sampling import greedy_core, sample_core
+
+        def horizon(params, bt, active, temps, top_ps, key, last_tok,
+                    lengths, k_pool, v_pool):
+            act = active.astype(jnp.int32)
+            # the all-greedy shortcut v1's sample_batch takes on the host,
+            # moved in-jit: one traced predicate selects pure argmax over the
+            # full top-p pipeline at runtime (per-row results are identical)
+            all_greedy = jnp.all(temps <= 0.0)
+
+            def one(carry, _):
+                key, last_tok, lengths, k_pool, v_pool = carry
+                logits, k_pool, v_pool = self._decode_body(
+                    params, last_tok, bt, lengths, k_pool, v_pool)
+                key, sub = jax.random.split(key)
+                toks = jax.lax.cond(
+                    all_greedy,
+                    lambda lg: greedy_core(lg, cfg.vocab_size),
+                    lambda lg: sample_core(lg, temps, top_ps, sub,
+                                           cfg.vocab_size),
+                    logits)
+                # padding rows: freeze token + length so their KV write stays
+                # parked at slot 0 of the pool's scratch page forever
+                toks = jnp.where(active, toks, last_tok)
+                return (key, toks, lengths + act, k_pool, v_pool), toks
+
+            (key, last_tok, lengths, k_pool, v_pool), toks = jax.lax.scan(
+                one, (key, last_tok, lengths, k_pool, v_pool), None,
+                length=k_steps)
+            return toks, key, last_tok, lengths, k_pool, v_pool
+
+        if self.mesh is None:
+            fn = jax.jit(horizon, donate_argnums=(8, 9))
+        else:
+            r, kv = self._repl, self._kv_sh
+            fn = jax.jit(horizon, donate_argnums=(8, 9),
+                         in_shardings=(self._param_sh, r, r, r, r, r, r, r,
+                                       kv, kv),
+                         out_shardings=(r, r, r, r, kv, kv))
+        self._fused_fns[key_t] = fn
+        return fn
+
+    def warmup_fused(self, batch_buckets, page_buckets, horizons) -> int:
+        """Precompile the bucketed fused decode jits ahead of serving (the
+        §4.2 warmup pass) so steady state never recompiles. Runs each bucket
+        combination once against a transient throwaway KV pool (donated and
+        chained call-to-call, so the warmup never touches live pages and
+        peaks at one extra pool copy). Returns the number of executables
+        compiled. Note: ``jit.lower().compile()`` does NOT seed the dispatch
+        cache on this jax version, so the warmup must really call."""
+        k = jnp.zeros_like(self.pool.k)
+        v = jnp.zeros_like(self.pool.v)
+        if self.mesh is not None:
+            k = jax.device_put(k, self._kv_sh)
+            v = jax.device_put(v, self._kv_sh)
+        key = jax.random.PRNGKey(0)
+        n = 0
+        for k_steps in sorted(set(horizons)):
+            for bb in sorted(set(batch_buckets)):
+                for pb in sorted(set(page_buckets)):
+                    fn = self._decode_fused_fn(k_steps, bb, pb)
+                    _, key, _, _, k, v = fn(
+                        self.params, jnp.zeros((bb, pb), jnp.int32),
+                        jnp.zeros((bb,), bool), jnp.zeros((bb,), jnp.float32),
+                        jnp.ones((bb,), jnp.float32), key,
+                        jnp.zeros((bb,), jnp.int32),
+                        jnp.ones((bb,), jnp.int32), k, v)
+                    n += 1
+        jax.block_until_ready(k)
+        return n
 
     # ------------------------------------------------------------ prefill
     def prefill_chunk(self, seq: SequenceState, chunk_tokens: List[int]

@@ -1,12 +1,17 @@
 """Sampling for FLOWSERVE's model generator: greedy / temperature / top-p.
 
-Two entry points:
+Three entry points:
   * ``sample``       — one SamplingParams for a whole logits batch (oracle /
                        offline paths).
   * ``sample_batch`` — per-row temperature/top-p as arrays, one jit'd device
-                       dispatch for the whole decode batch (the engine hot
-                       path: one ``fold_in``-free split per step, not one
-                       dispatch per sequence).
+                       dispatch for the whole decode batch (one
+                       ``fold_in``-free split per step, not one dispatch per
+                       sequence).
+  * ``sample_core``  — the traceable per-row sampling math itself, shared by
+                       ``sample_batch`` and the fused decode+sample step
+                       (DESIGN.md §8): fusing callers inline it into the
+                       decode jit so logits never leave the device, and both
+                       paths stay bit-identical by construction.
 """
 from __future__ import annotations
 
@@ -46,9 +51,12 @@ def sample(logits: jax.Array, params: SamplingParams, key: jax.Array,
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnums=(4,))
-def _sample_batch(logits: jax.Array, temperature: jax.Array, top_p: jax.Array,
-                  key: jax.Array, vocab_size: int) -> jax.Array:
+def sample_core(logits: jax.Array, temperature: jax.Array, top_p: jax.Array,
+                key: jax.Array, vocab_size: int) -> jax.Array:
+    """Traceable per-row sampling: (B, Vp) logits + per-row params + ONE step
+    key -> (B,) token ids. Every row is independent, so a bucket-padded batch
+    samples its real rows bit-identically to the exact-size batch (greedy
+    rows never consume randomness)."""
     vp = logits.shape[-1]
     logits = logits.astype(jnp.float32)
     if vp > vocab_size:
@@ -71,13 +79,27 @@ def _sample_batch(logits: jax.Array, temperature: jax.Array, top_p: jax.Array,
     return jnp.where(temperature <= 0.0, greedy, drawn.astype(jnp.int32))
 
 
-@functools.partial(jax.jit, static_argnums=(1,))
-def _greedy_batch(logits: jax.Array, vocab_size: int) -> jax.Array:
+@functools.partial(jax.jit, static_argnums=(4,))
+def _sample_batch(logits: jax.Array, temperature: jax.Array, top_p: jax.Array,
+                  key: jax.Array, vocab_size: int) -> jax.Array:
+    return sample_core(logits, temperature, top_p, key, vocab_size)
+
+
+def greedy_core(logits: jax.Array, vocab_size: int) -> jax.Array:
+    """Traceable pad-masked argmax — the all-greedy shortcut. Row-for-row
+    identical to ``sample_core`` at temperature<=0, without the
+    sort/softmax/cumsum pipeline (fused decode branches here via
+    ``lax.cond`` when every row of the batch is greedy)."""
     vp = logits.shape[-1]
     logits = logits.astype(jnp.float32)
     if vp > vocab_size:
         logits = jnp.where(jnp.arange(vp)[None, :] >= vocab_size, -1e30, logits)
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _greedy_batch(logits: jax.Array, vocab_size: int) -> jax.Array:
+    return greedy_core(logits, vocab_size)
 
 
 def sample_batch(logits: jax.Array, temperature, top_p, key: jax.Array,

@@ -150,6 +150,26 @@ class Scheduler:
         self.sched_time += time.monotonic() - t0
         return plan
 
+    def safe_horizon(self, batch: List[SequenceState], k_target: int,
+                     budget: int) -> int:
+        """Multi-step decode proof (DESIGN.md §8): K decode+sample steps may
+        run as ONE fused device dispatch iff the scheduler can show that for
+        the next K steps (a) no prefill admission can interleave — every
+        queue except ``running`` is empty, (b) the batch IS the whole
+        running set (composition cannot change under it), and (c) no member
+        can exhaust its ``max_new_tokens`` budget mid-horizon. EOS cannot be
+        proven ahead of sampling, so the engine checks it one horizon late
+        and discards post-stop tokens. Scheduling the horizon needs only
+        token COUNTS, never values — the same §4.2 property that makes
+        async single-step planning sound."""
+        if k_target <= 1 or budget <= 1:
+            return 1
+        if self.waiting or self.prefetching or self.ready or self.prefilling:
+            return 1
+        if len(batch) != len(self.running):
+            return 1
+        return min(k_target, budget)
+
     # ------------------------------------------------------------ commits
     def on_prefill_progress(self, seq: SequenceState, done: bool) -> None:
         if done:

@@ -24,10 +24,12 @@ from repro.engine.tokenizer import ByteTokenizer
 from repro.models import get_model
 
 
-def build_te(bundle, params, mode: str, name: str, tp: int = 1) -> FlowServe:
+def build_te(bundle, params, mode: str, name: str, tp: int = 1,
+             horizon: int = 8, fused: bool = True) -> FlowServe:
     ecfg = EngineConfig(mode=mode, tp=tp, n_pages=256, page_size=8, n_slots=8,
                         max_len=256, max_batch_tokens=64, chunk_size=16,
-                        max_decode_batch=8)
+                        max_decode_batch=8, fused_decode=fused,
+                        decode_horizon=horizon)
     return FlowServe(bundle, params, ecfg, name=name)
 
 
@@ -42,6 +44,12 @@ def main() -> None:
                     help="devices per TE (SPMD tensor parallelism; simulated "
                          "hosts need XLA_FLAGS=--xla_force_host_platform_"
                          "device_count=N)")
+    ap.add_argument("--horizon", type=int, default=8,
+                    help="max fused multi-step decode horizon K "
+                         "(DESIGN.md §8; 1 disables multi-step)")
+    ap.add_argument("--no-fused-decode", action="store_true",
+                    help="legacy v1 decode path (per-step host block tables "
+                         "+ standalone sampler dispatch)")
     args = ap.parse_args()
     if args.tp > 1:
         print(f"TE mesh: 1x{args.tp} over {jax.device_count()} visible devices")
@@ -54,7 +62,8 @@ def main() -> None:
     prompts = [f"request {i}: explain serverless llm serving" for i in range(args.requests)]
 
     if args.mode == "colocated":
-        te = build_te(bundle, params, "colocated", "te-0", tp=args.tp)
+        te = build_te(bundle, params, "colocated", "te-0", tp=args.tp,
+                      horizon=args.horizon, fused=not args.no_fused_decode)
         t0 = time.monotonic()
         for p in prompts:
             te.add_request(Request(prompt_tokens=tok.encode(p), sampling=sp))
@@ -70,7 +79,8 @@ def main() -> None:
 
     if args.mode == "pd":
         pe = build_te(bundle, params, "prefill", "te-p0", tp=args.tp)
-        de = build_te(bundle, params, "decode", "te-d0", tp=args.tp)
+        de = build_te(bundle, params, "decode", "te-d0", tp=args.tp,
+                      horizon=args.horizon, fused=not args.no_fused_decode)
         pe.distflow.link_cluster([de.distflow])
         for p in prompts:
             pe.add_request(Request(prompt_tokens=tok.encode(p), sampling=sp))

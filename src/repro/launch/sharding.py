@@ -237,6 +237,16 @@ def engine_kv_run_sharding(cfg: ModelConfig, mesh) -> NamedSharding:
     return engine_kv_pool_sharding(cfg, mesh)
 
 
+def engine_decode_state_sharding(mesh) -> NamedSharding:
+    """Placement of the decode hot loop's persistent carried state — block
+    table, lengths, last-token, active-mask and sampling-param vectors plus
+    the PRNG key (DESIGN.md §8). These are O(batch) scalars consumed by
+    every shard of the SPMD decode step, so they replicate over the TE's
+    whole 1×tp mesh; the fused decode jit pins them in AND out so the
+    carried state never migrates off-policy between horizons."""
+    return NamedSharding(mesh, P())
+
+
 def engine_cache_shardings(cfg: ModelConfig, cache_like, mesh,
                            n_slots: int, max_len: int) -> Any:
     """SlotRunner dense caches: reuse cache_specs with an engine-shaped

@@ -173,6 +173,30 @@ def test_overlap_defers_import_until_first_decode(qwen):
         _colocated_tokens(bundle, params, [PROMPT])
 
 
+def test_per_layer_ready_events(qwen):
+    """ROADMAP PR-2 follow-up: MigrationHandle exposes per-layer chunk
+    readiness, and the engine scatters each chunk as IT lands — the first
+    decode of a migrated sequence starts behind the FIRST chunk, not the
+    last (FlowServe._import_layerwise)."""
+    bundle, params = qwen
+    pe = _engine(bundle, params, "prefill")
+    rid = pe.add_request(Request(prompt_tokens=PROMPT, sampling=SP))
+    while pe.has_work():
+        pe.step()
+    payload = pe.export_kv(rid)
+    handle = pe.distflow.transfer_sharded(
+        {"k": payload["k"], "v": payload["v"]}, "nowhere", layer_chunks=2)
+    assert handle.landed == [False, False]
+    l0, k0, _ = handle.wait_chunk(0)
+    assert l0 == 0 and handle.landed == [True, False]
+    assert not handle.xfer.done           # tail chunk still outstanding
+    assert handle.chunk_ready(1)          # device_put long since landed
+    handle.wait_chunk(1)
+    assert handle.xfer.done               # last consumed -> transfer done
+    np.testing.assert_array_equal(np.asarray(k0),
+                                  np.asarray(payload["k"])[:k0.shape[0]])
+
+
 def test_layer_chunked_transfer_covers_all_layers(qwen):
     bundle, params = qwen
     pe = _engine(bundle, params, "prefill")

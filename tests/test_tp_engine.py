@@ -63,8 +63,8 @@ def _raw_logits(arch, tp):
     return pre, dec
 
 
-def _serve_tokens(arch, tp, n=3):
-    te = _engine(arch, tp)
+def _serve_tokens(arch, tp, n=3, **kw):
+    te = _engine(arch, tp, **kw)
     prompts = [[1] + [int(x) for x in np.random.RandomState(i).randint(3, 200, 11)]
                for i in range(n)]
     for i, p in enumerate(prompts):
@@ -101,8 +101,13 @@ def test_tp2_engine_tokens_equal_tp1_qwen3():
     t1, _ = _serve_tokens("qwen3-8b", 1)
     t2, te2 = _serve_tokens("qwen3-8b", 2)
     assert t1 == t2
-    # batched sampling: exactly one sampler dispatch per decode step
-    assert te2.sampler_dispatches == te2.decode_steps
+    # fused decode (DESIGN.md §8): sampling rides inside the decode jit, so
+    # ZERO standalone sampler dispatches; the legacy path still pays one
+    # batched dispatch per step (and the old per-seq loop paid B)
+    assert te2.sampler_dispatches == 0
+    t2l, te2l = _serve_tokens("qwen3-8b", 2, fused_decode=False)
+    assert t1 == t2l
+    assert te2l.sampler_dispatches == te2l.decode_steps
 
 
 @needs2

@@ -1,0 +1,268 @@
+"""Serving-plane benchmark (DESIGN.md §9): Algorithm 1 vs round-robin over
+a LIVE mixed fleet — one PD-disaggregated pair + one PD-colocated TE, all
+real FLOWSERVE engines (T1 numerics on smoke configs).
+
+Closed-loop driver: Poisson arrivals feed the JE while it steps the fleet;
+agent sessions are genuinely closed-loop (turn t+1's prompt extends turn
+t's prompt + completion, submitted the moment t completes). Three traffic
+mixes:
+
+* ``longP_shortD`` — long prefill / short decode (summarization-like);
+* ``shortP_longD`` — short prefill / long decode (generation-like);
+* ``agent``       — multi-turn prefix-sharing sessions (locality-bound).
+
+Per (mix, policy): mean/p90 TTFT, mean TPOT, goodput (completions meeting
+the TTFT SLO per wall second), tok/s, the Algorithm-1 decision counters,
+and per-request greedy-token PARITY against a single colocated TE serving
+the same closed loop — the placement layer must never change tokens.
+
+    PYTHONPATH=src python benchmarks/bench_serving_plane.py [--requests 12]
+        [--rps 8] [--max-wall 120]
+
+Also exposes run() -> CSV rows for benchmarks/run.py (key
+``serving_plane``; ``--json`` → BENCH_serving_plane.json).
+"""
+from __future__ import annotations
+
+import os
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = \
+        (_flags + " --xla_force_host_platform_device_count=8").strip()
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.abstractions import RequestType, UserRequest
+from repro.core.serving_plane import ServingJobEngine, TopologySpec
+from repro.engine import EngineConfig, SamplingParams
+from repro.models import get_model
+
+# Goodput SLO: machine-relative (CPU smoke engines timeshare one host, so
+# absolute latencies are meaningless) — a completion counts toward goodput
+# when its TTFT is within SLO_FACTOR x the single-TE reference run's
+# median TTFT for the same mix.
+SLO_FACTOR = 1.5
+
+
+# --------------------------------------------------------------- workloads
+def _tok(rng, n, lo, hi):
+    return [1] + [int(x) for x in rng.randint(lo, hi, n)]
+
+
+def _turn_suffix(mix_seed: int, session: int, turn: int):
+    """Deterministic per-(session, turn) user tokens: the closed-loop agent
+    driver must build IDENTICAL turn prompts regardless of the order
+    completions happen to arrive in (parity across policies)."""
+    rng = np.random.RandomState(mix_seed + 131 * session + 7 * turn)
+    return _tok(rng, 8, 160, 240)[1:]
+
+
+def make_mix(mix: str, n: int, rps: float, seed: int = 0):
+    """Open-loop arrivals [(t, key, tokens, max_new)] + closed-loop session
+    continuations (agent mix). Token spaces are disjoint per mix so prefix
+    caches never couple mixes."""
+    rng = np.random.RandomState(seed)
+    gaps = rng.exponential(1.0 / rps, size=n)
+    ts = np.cumsum(gaps)
+    arrivals, sessions = [], {}
+    if mix == "longP_shortD":
+        for i in range(n):
+            arrivals.append((float(ts[i]), f"{mix}-{i}",
+                             _tok(rng, 72 + int(rng.randint(0, 24)), 3, 80), 6))
+    elif mix == "shortP_longD":
+        for i in range(n):
+            arrivals.append((float(ts[i]), f"{mix}-{i}",
+                             _tok(rng, 6 + int(rng.randint(0, 8)), 80, 160), 24))
+    elif mix == "agent":
+        n_sessions = max(2, n // 3)
+        for s in range(n_sessions):
+            prompt = _tok(np.random.RandomState(seed + 977 * s), 24, 160, 240)
+            arrivals.append((float(ts[s]), f"{mix}-s{s}t0", prompt, 8))
+            sessions[f"{mix}-s{s}t0"] = (s, 0)
+        # later turns spawn on completion (closed loop); 3 turns/session
+    else:
+        raise ValueError(mix)
+    return arrivals, sessions
+
+
+# --------------------------------------------------------------- driver
+def drive(je: ServingJobEngine, mix: str, n: int, rps: float,
+          max_wall: float, seed: int = 0):
+    """Closed-loop run: submit Poisson arrivals while stepping the fleet;
+    agent sessions submit their next turn the moment the previous one
+    completes. Returns {key: Completion}."""
+    arrivals, sessions = make_mix(mix, n, rps, seed)
+    sp = {key: SamplingParams(temperature=0.0, max_new_tokens=mn,
+                              stop_on_eos=False)
+          for _, key, _, mn in arrivals}
+    prompts = {key: toks for _, key, toks, _ in arrivals}
+    done = {}
+    i = 0
+    t0 = time.monotonic()
+    while True:
+        now = time.monotonic() - t0
+        while i < len(arrivals) and arrivals[i][0] <= now:
+            _, key, toks, mn = arrivals[i]
+            je.submit(toks, sampling=sp[key],
+                      request=UserRequest(rtype=RequestType.CHAT,
+                                          payload={"tokens": toks},
+                                          req_id=key))
+            i += 1
+        for c in je.step():
+            done[c.req_id] = c
+            if c.req_id in sessions:            # agent: next turn now
+                s, t = sessions.pop(c.req_id)
+                if t < 2:
+                    key = f"{mix}-s{s}t{t + 1}"
+                    toks = (prompts[c.req_id] + list(c.tokens)
+                            + _turn_suffix(seed, s, t + 1))
+                    prompts[key] = toks
+                    sessions[key] = (s, t + 1)
+                    sp[key] = SamplingParams(temperature=0.0,
+                                             max_new_tokens=8,
+                                             stop_on_eos=False)
+                    arrivals.append((now, key, toks, 8))
+        if i >= len(arrivals) and not je.has_work() and not sessions:
+            break
+        if now > max_wall:
+            break
+    wall = time.monotonic() - t0
+    return done, wall
+
+
+def _metrics(done: dict, wall: float, slo_ttft: float) -> dict:
+    ttfts = np.asarray([c.ttft for c in done.values()])
+    tpots = np.asarray([c.tpot for c in done.values()])
+    n_tok = sum(len(c.tokens) for c in done.values())
+    return {
+        "n": len(done),
+        "ttft_mean_ms": float(ttfts.mean() * 1e3) if len(ttfts) else 0.0,
+        "ttft_p90_ms": float(np.percentile(ttfts, 90) * 1e3)
+        if len(ttfts) else 0.0,
+        "tpot_ms": float(tpots.mean() * 1e3) if len(tpots) else 0.0,
+        "slo_ttft_ms": slo_ttft * 1e3,
+        "goodput_rps": sum(1 for t in ttfts if t <= slo_ttft) / wall,
+        "tok_s": n_tok / wall,
+        "wall_s": wall,
+    }
+
+
+# --------------------------------------------------------------- harness
+def _plane(bundle, params, topo: TopologySpec, policy: str,
+           heat) -> ServingJobEngine:
+    hm, lens, ratios = heat
+    ecfg = EngineConfig(n_pages=256, page_size=8, max_batch_tokens=64,
+                        chunk_size=16, max_decode_batch=8)
+    return ServingJobEngine(bundle, params, topo, heatmap=hm,
+                            prefill_lens=lens, decode_ratios=ratios,
+                            policy=policy, ecfg=ecfg)
+
+
+def _warm(je: ServingJobEngine) -> None:
+    sp = SamplingParams(temperature=0.0, max_new_tokens=4, stop_on_eos=False)
+    for i in range(4):
+        je.submit([1] + [250 + (i % 4)] * (8 + 24 * (i % 2)), sampling=sp)
+    je.run_to_completion()
+
+
+def bench(n: int = 9, rps: float = 1.5, max_wall: float = 150.0,
+          arch: str = "qwen3-8b"):
+    bundle = get_model(arch, smoke=True)
+    params = bundle.init_params(jax.random.PRNGKey(0), jnp.float32)
+    # smoke-scale heatmap: the long-prefill/short-decode cell favors the PD
+    # pair, everything else favors colocated — the same table shape
+    # HeatmapStudy produces at production scale (§5.3), re-anchored to
+    # smoke prompt lengths so pd_aware has a real decision to make.
+    heat = (np.asarray([[-1.0, -1.0], [+1.0, -1.0]]), [24, 84], [0.1, 3.0])
+    topo = TopologySpec(pd=1, colo=1)
+    planes = {pol: _plane(bundle, params, topo, pol, heat)
+              for pol in ("dist_sched", "round_robin")}
+    ref = _plane(bundle, params, TopologySpec(pd=0, colo=1),
+                 "round_robin", heat)
+    for je in [*planes.values(), ref]:
+        _warm(je)
+
+    results = {}
+    for mix in ("longP_shortD", "shortP_longD", "agent"):
+        ref_done, ref_wall = drive(ref, mix, n, rps, max_wall, seed=7)
+        ref_toks = {k: list(c.tokens) for k, c in ref_done.items()}
+        slo = SLO_FACTOR * float(np.median([c.ttft
+                                            for c in ref_done.values()]))
+        results[mix] = {"ref": _metrics(ref_done, ref_wall, slo)}
+        for pol, je in planes.items():
+            d0 = dict(je.scheduler.decisions)
+            done, wall = drive(je, mix, n, rps, max_wall, seed=7)
+            m = _metrics(done, wall, slo)
+            m["decisions"] = {k: je.scheduler.decisions[k] - d0[k]
+                              for k in d0}
+            m["parity"] = (len(done) == len(ref_done)
+                           and all(list(done[k].tokens) == ref_toks[k]
+                                   for k in ref_toks))
+            results[mix][pol] = m
+    return results
+
+
+def run() -> list:
+    """CSV rows for benchmarks/run.py: (name, value, derived)."""
+    rows = []
+    results = bench()
+    wins = []
+    for mix, by_pol in results.items():
+        for pol in ("dist_sched", "round_robin"):
+            m = by_pol[pol]
+            dec = m["decisions"]
+            rows.append((
+                f"serving_plane_{mix}_{pol}", m["ttft_mean_ms"] * 1e3,
+                f"ttft_p90_ms={m['ttft_p90_ms']:.0f};"
+                f"tpot_ms={m['tpot_ms']:.1f};"
+                f"goodput_rps={m['goodput_rps']:.2f}"
+                f"@slo{m['slo_ttft_ms']:.0f}ms;"
+                f"tok_s={m['tok_s']:.1f};n={m['n']};"
+                f"parity={m['parity']};"
+                f"decisions=disagg:{dec['pd_disagg']}/colo:{dec['pd_colo']}"
+                f"/loc:{dec['locality']}/load:{dec['load']}"))
+        ds, rr = by_pol["dist_sched"], by_pol["round_robin"]
+        if (ds["ttft_mean_ms"] < rr["ttft_mean_ms"]
+                or ds["goodput_rps"] > rr["goodput_rps"]):
+            wins.append(mix)
+    rows.append(("serving_plane_dist_sched_wins", float(len(wins)),
+                 f"mixes_where_dist_sched_beats_rr_on_ttft_or_goodput="
+                 f"{','.join(wins) or 'none'}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--requests", type=int, default=9)
+    ap.add_argument("--rps", type=float, default=1.5)
+    ap.add_argument("--max-wall", type=float, default=150.0)
+    args = ap.parse_args()
+
+    print(f"devices={jax.device_count()} arch={args.arch}-smoke "
+          f"topology=pd=1,colo=1 n={args.requests} rps={args.rps} "
+          f"slo=TTFT<={SLO_FACTOR}x ref median")
+    results = bench(args.requests, args.rps, args.max_wall, args.arch)
+    print(f"{'mix':>14} {'policy':>12} {'n':>3} {'ttft':>8} {'p90':>8} "
+          f"{'tpot':>7} {'goodput':>8} {'tok/s':>7} {'parity':>7}  decisions")
+    for mix, by_pol in results.items():
+        for pol in ("dist_sched", "round_robin", "ref"):
+            m = by_pol[pol]
+            dec = m.get("decisions", {})
+            dec_s = (f"disagg:{dec['pd_disagg']} colo:{dec['pd_colo']} "
+                     f"loc:{dec['locality']} load:{dec['load']}"
+                     if dec else "-")
+            print(f"{mix:>14} {pol:>12} {m['n']:>3} "
+                  f"{m['ttft_mean_ms']:>6.0f}ms {m['ttft_p90_ms']:>6.0f}ms "
+                  f"{m['tpot_ms']:>5.1f}ms {m['goodput_rps']:>8.2f} "
+                  f"{m['tok_s']:>7.1f} {m.get('parity', '-')!s:>7}  {dec_s}")
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,7 @@ MODULES = [
     ("tp_engine", "benchmarks.bench_tp_engine"),
     ("pd_migration", "benchmarks.bench_pd_migration"),
     ("decode_hotloop", "benchmarks.bench_decode_hotloop"),
+    ("serving_plane", "benchmarks.bench_serving_plane"),
 ]
 
 

@@ -182,6 +182,45 @@ class ModelLoader:
 
 
 @dataclass
+class LoadSpreadTrigger:
+    """Serving-plane scale-out trigger (DESIGN.md §9): fire when the
+    relative load spread across the fleet's TEs stays above ``threshold``
+    for ``patience`` consecutive observations. Firing is one-shot per
+    breach: the trigger disarms until the spread next drops below the
+    threshold — a freshly forked TE joins with zero load, which KEEPS the
+    spread high, so re-arming on recovery (not on time) is what prevents a
+    fork storm — and ``max_fires`` caps total fires for bounded fleets."""
+
+    threshold: float = 0.5              # (max-min)/max relative spread
+    patience: int = 8                   # consecutive breached observations
+    min_load: float = 1.0               # ignore spread across near-idle TEs
+    max_fires: int = 1
+    breach_steps: int = 0
+    armed: bool = True
+    fires: int = 0
+
+    def observe(self, loads: List[float]) -> bool:
+        """Feed one observation of the fleet's live loads; True ⇒ scale out
+        now (the caller forks a TE via ``FastScaler`` / NPU-fork)."""
+        peak = max(loads) if loads else 0.0
+        spread = 0.0 if peak < self.min_load \
+            else (peak - min(loads)) / peak
+        if spread <= self.threshold:
+            self.breach_steps = 0
+            self.armed = True
+            return False
+        if not self.armed or self.fires >= self.max_fires:
+            return False
+        self.breach_steps += 1
+        if self.breach_steps < self.patience:
+            return False
+        self.armed = False
+        self.breach_steps = 0
+        self.fires += 1
+        return True
+
+
+@dataclass
 class ScaleEvent:
     te_id: str
     steps: Dict[str, float]
@@ -225,7 +264,12 @@ class FastScaler:
     def scale_one(self, asset: ModelAsset, optimized: bool = True,
                   source: Optional[DistFlow] = None,
                   targets: Optional[List[DistFlow]] = None,
-                  link: str = "ici", n_parallel: int = 1) -> ScaleEvent:
+                  link: str = "ici", n_parallel: int = 1,
+                  preloaded: Optional[LoadResult] = None) -> ScaleEvent:
+        """Run the 5-step pipeline. ``preloaded`` lets a caller that already
+        executed the TE-Load step (the serving plane's live
+        ``FlowServe.fork_from``, DESIGN.md §9) price the pipeline around it
+        without charging the transfer fabric twice."""
         steps: Dict[str, float] = {}
         # 1. Scaler-Pre
         pod = self._grab_pod() if optimized else None
@@ -238,7 +282,9 @@ class FastScaler:
             steps["te_pre_load"] = (self.t.te_pre_load_optimized if optimized
                                     else self.t.te_pre_load)
         # 3. TE-Load
-        if source is not None and targets:
+        if preloaded is not None:
+            lr = preloaded
+        elif source is not None and targets:
             lr = self.loader.npu_fork(asset, source, targets, link=link)
         else:
             lr = self.loader.local_load(asset, n_parallel_tes=n_parallel)

@@ -8,7 +8,12 @@
   3. otherwise pick the least-loaded TE.
 
 TEs are described by ``TEHandle``s — the JE-side view (type, load, local
-prompt-tree index shared with the global tree).
+prompt-tree index shared with the global tree). A handle is a LIVE
+adapter when FLOWSERVE engines are attached (``engine`` — and, for a PD
+pair, ``decode_engine``): ``refresh()`` pulls the load signal from real
+engine state (queued prefill tokens, in-flight decode budget,
+``Scheduler.safe_horizon`` headroom — DESIGN.md §9) instead of the
+hand-fed floats the T3 simulations use.
 """
 from __future__ import annotations
 
@@ -28,11 +33,48 @@ class TEHandle:
     te_type: str                        # "colocated" | "pd_pair"
     load: float = 0.0                   # outstanding work (tokens)
     n_running: int = 0
-    engine: object = None               # live FlowServe (or sim TE)
+    engine: object = None               # live FlowServe (or sim TE);
+    #                                     pd_pair: the PREFILL-side engine
+    decode_engine: object = None        # pd_pair: the DECODE-side engine
     prompt_tree: RadixTree = field(default_factory=RadixTree)
 
     def record_prompt(self, tokens) -> None:
         self.prompt_tree.insert(tuple(tokens), self.te_id)
+
+    def live_engines(self) -> List[object]:
+        """The attached engines that expose real load signals."""
+        return [e for e in (self.engine, self.decode_engine)
+                if e is not None and hasattr(e, "load_metrics")]
+
+    def refresh(self) -> float:
+        """Live adapter (DESIGN.md §9): recompute ``load`` from the attached
+        engines' REAL state. The signal is
+
+            load = queued_prefill_tokens + inflight_decode_tokens / headroom
+
+        where headroom is the fused decode horizon the TE's scheduler can
+        currently prove (``Scheduler.safe_horizon``): a TE in steady
+        single-batch decode serves K steps per host dispatch (DESIGN.md §8),
+        so its marginal decode token is cheaper than one on a TE that is
+        interleaving prefill. A PD pair sums both endpoints — a sequence
+        lives in exactly one of them at any time, so nothing double-counts.
+        Handles without live engines (the T3 sims, unit tests) keep their
+        hand-fed ``load`` float untouched."""
+        engines = self.live_engines()
+        if not engines:
+            return self.load
+        prefill_toks = decode_toks = 0.0
+        headroom = 1.0
+        n_active = 0
+        for eng in engines:
+            m = eng.load_metrics()
+            prefill_toks += m["queued_prefill_tokens"]
+            decode_toks += m["inflight_decode_tokens"]
+            headroom = max(headroom, m["horizon_headroom"])
+            n_active += m["n_queued"] + m["n_running"]
+        self.load = prefill_toks + decode_toks / headroom
+        self.n_running = n_active
+        return self.load
 
 
 @dataclass
@@ -91,6 +133,8 @@ class DistributedScheduler:
     # ------------------------------------------------------ Algorithm 1
     def dist_sched(self, req: SchedRequest) -> TEHandle:
         tes = list(self.tes.values())
+        for te in tes:          # live handles pull real engine state (§9)
+            te.refresh()
         tes = self.pd_aware(req, tes)
         if self._is_load_balanced(tes):
             chosen = self.locality_aware(req, tes)
@@ -140,8 +184,22 @@ class DistributedScheduler:
         self.global_tree.record(req.tokens, te.te_id)
         te.record_prompt(req.tokens)
 
-    def complete(self, req: SchedRequest, te: TEHandle) -> None:
-        te.load = max(0.0, te.load - (len(req.tokens) + req.predicted_decode))
+    def complete(self, req: SchedRequest, te: TEHandle,
+                 actual_decode: Optional[int] = None) -> None:
+        """Release the tokens the request ACTUALLY consumed.
+
+        ``commit`` reserved ``len(tokens) + predicted_decode``, but the real
+        decode length routinely differs from the prediction; callers that
+        track real progress (the live serving plane's ``refresh``, the T3
+        sims that decay load as tokens generate) end up with ``te.load``
+        drifting over a long run if completion subtracts the stale
+        prediction — every under-predicted request leaves phantom load
+        behind forever. Passing the observed decode length releases the
+        consumed tokens instead; the clamp guards the over-release side."""
+        consumed = len(req.tokens) + (req.predicted_decode
+                                      if actual_decode is None
+                                      else actual_decode)
+        te.load = max(0.0, te.load - consumed)
         te.n_running = max(0, te.n_running - 1)
 
 

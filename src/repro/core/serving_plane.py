@@ -1,0 +1,365 @@
+"""The live serving plane (DESIGN.md §9): a model-serving JE that owns a
+fleet of REAL FLOWSERVE TEs and routes requests through Algorithm 1.
+
+This is the layer that composes everything below it into the paper's
+system shape (§3): an external ``UserRequest`` decomposes into a serving
+``Job`` whose ``Task``s (prefill/decode or colocated) land on live
+engines —
+
+* **PD-disaggregated pairs**: a prefill-mode TE runs chunked prefill,
+  then each finished request's KV migrates to the pair's decode-mode TE
+  over ``DistFlow.transfer_sharded`` (``FlowServe.migrate_out``, the §7
+  overlap path) — pumped every JE step, i.e. the steady path rather than
+  a test fixture;
+* **PD-colocated TEs**: one engine runs both phases with chunked-prefill
+  interleaving.
+
+Placement is ``DistributedScheduler.dist_sched`` (Algorithm 1) over live
+``TEHandle`` adapters whose load signal comes from real engine state
+(queued prefill tokens, in-flight decode budget, fused-horizon headroom
+— ``FlowServe.load_metrics``), or ``round_robin_scheduler`` as the
+degenerate baseline policy. When the fleet's load spread stays above a
+threshold (``LoadSpreadTrigger``), the plane scales out: ``FastScaler``
+prices the 5-step pipeline while ``FlowServe.fork_from`` NPU-forks the
+weights from a live TE onto the new one (§6.3).
+
+TEs occupy DISJOINT device windows when ``tp > 1``
+(``EngineConfig.device_offset``), so PD migration and NPU-fork move
+bytes between genuinely different device sets.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, List, Optional
+
+from repro.core.abstractions import (Job, RequestType, Status, TaskKind,
+                                     UserRequest, decompose)
+from repro.core.scaling import FastScaler, LoadSpreadTrigger, ModelAsset
+from repro.core.scheduling import (DistSchedConfig, DistributedScheduler,
+                                   SchedRequest, TEHandle,
+                                   round_robin_scheduler)
+from repro.engine import EngineConfig, FlowServe, Request, SamplingParams
+from repro.engine.flowserve import Completion
+
+
+@dataclass
+class TopologySpec:
+    """Fleet shape: ``pd`` disaggregated 1P+1D pairs plus ``colo``
+    PD-colocated TEs, each TE an SPMD program over ``tp`` devices."""
+
+    pd: int = 0
+    colo: int = 1
+    tp: int = 1
+
+    @classmethod
+    def parse(cls, spec: str) -> "TopologySpec":
+        """Parse a ``--topology`` string: ``"pd=2,colo=2"``,
+        ``"pd=1,colo=1,tp=2"``."""
+        kw: Dict[str, int] = {}
+        for part in spec.split(","):
+            if not part.strip():
+                continue
+            key, sep, val = part.partition("=")
+            key = key.strip()
+            if not sep or key not in ("pd", "colo", "tp"):
+                raise ValueError(f"bad topology entry {part!r} in {spec!r} "
+                                 "(want pd=N,colo=N[,tp=N])")
+            kw[key] = int(val)
+        topo = cls(**kw)
+        if topo.pd + topo.colo < 1:
+            raise ValueError(f"empty topology {spec!r}")
+        return topo
+
+    def n_engines(self) -> int:
+        return 2 * self.pd + self.colo
+
+
+@dataclass
+class _PlaneRequest:
+    """JE-side per-request record tying the §3 abstractions together."""
+
+    job: Job
+    sreq: SchedRequest
+    handle: TEHandle
+    engine_req: Request
+    submitted: float = field(default_factory=time.monotonic)
+
+
+class ServingJobEngine:
+    """Model-serving JE over a live FLOWSERVE fleet (DESIGN.md §9)."""
+
+    def __init__(self, bundle, params, topology: TopologySpec, *,
+                 heatmap, prefill_lens, decode_ratios, predictor=None,
+                 policy: str = "dist_sched",
+                 ecfg: Optional[EngineConfig] = None,
+                 dcfg: Optional[DistSchedConfig] = None,
+                 scaler: Optional[FastScaler] = None,
+                 trigger: Optional[LoadSpreadTrigger] = None):
+        if policy not in ("dist_sched", "round_robin"):
+            raise ValueError(f"unknown policy {policy!r}")
+        self.bundle = bundle
+        self.params = params
+        self.topology = topology
+        base = ecfg if ecfg is not None else EngineConfig()
+        # TopologySpec.tp and EngineConfig.tp describe the same thing;
+        # whichever side was set wins, conflicting non-defaults are an error
+        if base.tp != topology.tp:
+            if base.tp == 1:
+                base = replace(base, tp=topology.tp)
+            elif topology.tp == 1:
+                topology.tp = base.tp
+            else:
+                raise ValueError(f"conflicting tp: EngineConfig.tp={base.tp} "
+                                 f"vs TopologySpec.tp={topology.tp}")
+        self._base_ecfg = base
+        self._offset_cursor = 0
+        self.engines: List[FlowServe] = []
+        self.policy = policy
+        self.scaler = scaler
+        self.trigger = trigger
+        self.scale_events: List[Dict[str, Any]] = []
+        self.steps = 0
+
+        handles: List[TEHandle] = []
+        for i in range(topology.pd):
+            pe = self._spawn(f"te-pd{i}-p", "prefill")
+            de = self._spawn(f"te-pd{i}-d", "decode")
+            handles.append(TEHandle(f"te-pd{i}", "pd_pair",
+                                    engine=pe, decode_engine=de))
+        for i in range(topology.colo):
+            ce = self._spawn(f"te-colo{i}", "colocated")
+            handles.append(TEHandle(f"te-colo{i}", "colocated", engine=ce))
+        # one M:N DistFlow peer group over the whole fleet (§4.6): PD pairs
+        # migrate KV, NPU-fork broadcasts weights, all on linked clocks
+        for i, eng in enumerate(self.engines):
+            eng.distflow.link_cluster(
+                [p.distflow for p in self.engines[i + 1:]])
+
+        self._handles = handles           # shared list: RR sees scale-outs
+        self.scheduler = DistributedScheduler(
+            handles, heatmap, prefill_lens, decode_ratios,
+            predictor=predictor,
+            cfg=dcfg if dcfg is not None else DistSchedConfig())
+        self._rr = round_robin_scheduler(self._handles) \
+            if policy == "round_robin" else None
+        self.requests: Dict[str, _PlaneRequest] = {}
+        self.jobs: Dict[str, Job] = {}
+        self.completions: List[Completion] = []
+        # per-pair queue of prefilled requests waiting on decode-TE capacity
+        self._migrate_pending: Dict[str, deque] = {
+            h.te_id: deque() for h in handles if h.te_type == "pd_pair"}
+
+    # ------------------------------------------------------------ fleet
+    def _spawn(self, name: str, mode: str) -> FlowServe:
+        ecfg = replace(self._base_ecfg, mode=mode,
+                       device_offset=self._next_offset())
+        te = FlowServe(self.bundle, self.params, ecfg, name=name)
+        self.engines.append(te)
+        return te
+
+    def _next_offset(self) -> int:
+        """Disjoint per-TE device windows under TP (DESIGN.md §7). With
+        tp=1 every TE shares device 0 (offsets are meaningless); when the
+        fleet outgrows the visible devices, later TEs fall back to window 0
+        (simulated co-residence) rather than failing bring-up."""
+        tp = self.topology.tp
+        if tp <= 1:
+            return 0
+        import jax
+        if self._offset_cursor + tp <= jax.device_count():
+            off = self._offset_cursor
+            self._offset_cursor += tp
+            return off
+        return 0
+
+    @property
+    def handles(self) -> List[TEHandle]:
+        return list(self._handles)
+
+    # ------------------------------------------------------------ intake
+    def submit(self, tokens, sampling: Optional[SamplingParams] = None,
+               predicted_decode: Optional[int] = None,
+               request: Optional[UserRequest] = None) -> str:
+        """request → job → task(s) → TE (Algorithm 1 or round-robin).
+
+        Returns the request id; its ``Completion`` surfaces from ``step``
+        once the decode finishes (on the pair's decode TE or the colocated
+        TE). ``predicted_decode`` defaults to the sampling budget; a
+        ``DecodeLengthPredictor`` attached to the scheduler refines it
+        inside ``pd_aware``.
+        """
+        sampling = sampling if sampling is not None else SamplingParams()
+        if request is None:
+            request = UserRequest(rtype=RequestType.CHAT,
+                                  payload={"tokens": list(tokens),
+                                           "max_new_tokens":
+                                               sampling.max_new_tokens})
+        job = decompose(request)[0]
+        job.status = Status.RUNNING
+        self.jobs[job.job_id] = job
+        sreq = SchedRequest(tokens=list(tokens),
+                            predicted_decode=sampling.max_new_tokens
+                            if predicted_decode is None else predicted_decode)
+        if self._rr is not None:
+            handle = self._rr(sreq)
+        else:
+            handle = self.scheduler.dist_sched(sreq)
+            self.scheduler.commit(sreq, handle)
+        if handle.te_type == "pd_pair":
+            tp_ = job.spawn(TaskKind.PREFILL, tokens=list(tokens))
+            tp_.te_id, tp_.status = handle.engine.name, Status.RUNNING
+            td = job.spawn(TaskKind.DECODE)
+            td.te_id = handle.decode_engine.name
+        else:
+            tc = job.spawn(TaskKind.COLOCATED, tokens=list(tokens))
+            tc.te_id, tc.status = handle.engine.name, Status.RUNNING
+        ereq = Request(prompt_tokens=list(tokens), sampling=sampling,
+                       req_id=request.req_id)
+        ereq.arrival = request.arrival      # TTFT from EXTERNAL arrival
+        handle.engine.add_request(ereq)
+        self.requests[request.req_id] = _PlaneRequest(job, sreq, handle, ereq)
+        return request.req_id
+
+    # ------------------------------------------------------------ drive
+    def step(self) -> List[Completion]:
+        """One JE iteration: step every TE, pump each PD pair's handoff
+        (prefill-done → ``migrate_out`` → decode TE, gated on destination
+        page capacity), harvest completions, feed the scale-out trigger."""
+        out: List[Completion] = []
+        for handle in self._handles:
+            pe, de = handle.engine, handle.decode_engine
+            if de is not None:                       # PD pair
+                if pe.has_work():
+                    pe.step()
+                pending = self._migrate_pending[handle.te_id]
+                pending.extend(pe.pop_migratable())
+                while pending and self._try_migrate(pe, de, pending[0]):
+                    pending.popleft()
+                if de.has_work():
+                    out.extend(de.step())
+            elif pe.has_work():                      # colocated
+                out.extend(pe.step())
+        for comp in out:
+            self._on_complete(comp)
+        self.completions.extend(out)
+        self._maybe_scale()
+        self.steps += 1
+        return out
+
+    def has_work(self) -> bool:
+        return bool(self.requests)
+
+    def run_to_completion(self, max_steps: int = 20000) -> List[Completion]:
+        out: List[Completion] = []
+        for _ in range(max_steps):
+            if not self.has_work():
+                break
+            out.extend(self.step())
+        return out
+
+    # ------------------------------------------------------------ PD pump
+    def _try_migrate(self, pe: FlowServe, de: FlowServe, req_id: str) -> bool:
+        """Hand one prefilled request to the pair's decode TE. Returns
+        False when the destination pool lacks pages for the KV run — the
+        request stays queued on the prefill side (backpressure) and the
+        pump retries next step."""
+        seq = pe._seqs.get(req_id)
+        if seq is None:
+            return True                   # released upstream; drop
+        if de.pool is not None:
+            # cheap pre-gate; cached (reclaimable) pages count because the
+            # import path evicts them coherently through the RTC
+            free = de.pool.free_page_count() + len(de.pool.reclaimable())
+            if len(seq.pages) > free:
+                return False
+        # import_request signals exhaustion (pages or slots) by raising
+        # BEFORE committing destination state and before the source
+        # releases — the request parks on the prefill side and retries
+        from repro.engine.kv_cache import OutOfPagesError
+        try:
+            pe.migrate_out(req_id, de)
+        except OutOfPagesError:
+            return False
+        task = self._find_task(req_id, TaskKind.PREFILL)
+        if task is not None:
+            task.status = Status.DONE
+        decode_task = self._find_task(req_id, TaskKind.DECODE)
+        if decode_task is not None:
+            decode_task.status = Status.RUNNING
+        return True
+
+    def _find_task(self, req_id: str, kind: TaskKind):
+        rec = self.requests.get(req_id)
+        if rec is None:
+            return None
+        for task in rec.job.tasks:
+            if task.kind == kind:
+                return task
+        return None
+
+    # ------------------------------------------------------------ harvest
+    def _on_complete(self, comp: Completion) -> None:
+        rec = self.requests.pop(comp.req_id, None)
+        if rec is None:
+            return
+        for task in rec.job.tasks:
+            task.status = Status.DONE
+        rec.job.status = Status.DONE
+        rec.job.result = comp
+        if self._rr is None:
+            # release the ACTUAL consumption, not the prediction — the
+            # complete() drift fix only helps if callers pass actuals
+            self.scheduler.complete(rec.sreq, rec.handle,
+                                    actual_decode=len(comp.tokens))
+
+    # ------------------------------------------------------------ scaling
+    def _maybe_scale(self) -> None:
+        if self.trigger is None:
+            return
+        loads = [h.refresh() for h in self._handles]
+        if not self.trigger.observe(loads):
+            return
+        # NPU-fork a new colocated TE from the least-loaded live engine
+        # (its ICI links are the freest; §6.3). FastScaler prices the
+        # 5-step bring-up pipeline around the same fork.
+        src_handle = min(self._handles, key=lambda h: h.load)
+        src_engine = src_handle.decode_engine or src_handle.engine
+        name = f"te-scale{len(self.scale_events)}"
+        ecfg = replace(self._base_ecfg, mode="colocated",
+                       device_offset=self._next_offset())
+        te = FlowServe.fork_from(src_engine, ecfg, name=name)
+        for eng in self.engines:
+            eng.distflow.link_cluster([te.distflow])
+        self.engines.append(te)
+        event = None
+        if self.scaler is not None:
+            from repro.core.scaling import LoadResult
+            from repro.engine.distflow import _nbytes
+            asset = ModelAsset(name=getattr(self.bundle.cfg, "name", "model"),
+                               n_bytes=_nbytes(self.params),
+                               tp=max(1, self.topology.tp))
+            # fork_from already moved the weights and charged DistFlow;
+            # hand its transfer to the pipeline as the TE-Load step
+            xfer = src_engine.distflow.log[-1]
+            event = self.scaler.scale_one(
+                asset, optimized=True,
+                preloaded=LoadResult("npu_fork_ici", xfer.sim_seconds,
+                                     xfer.n_bytes))
+        handle = TEHandle(name, "colocated", engine=te)
+        self._handles.append(handle)
+        self.scheduler.tes[name] = handle
+        self.scale_events.append({"step": self.steps, "te_id": name,
+                                  "source": src_engine.name, "event": event})
+
+    # ------------------------------------------------------------ stats
+    def fleet_metrics(self) -> Dict[str, Dict[str, float]]:
+        """Per-handle live load snapshot (refreshes every handle)."""
+        out = {}
+        for handle in self._handles:
+            handle.refresh()
+            out[handle.te_id] = {"load": handle.load,
+                                 "n_running": handle.n_running,
+                                 "type": handle.te_type}
+        return out

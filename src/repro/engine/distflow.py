@@ -23,6 +23,8 @@ payload is resharded in flight via ``jax.device_put`` to the destination
 mesh's sharding. Transfers are layer-chunked: each chunk's device_put is
 dispatched asynchronously, and the returned ``MigrationHandle`` blocks
 only at ``wait()`` — a decode TE keeps stepping while KV streams in.
+The steady-state driver is the serving plane's per-step PD-pair pump
+(``ServingJobEngine.step`` → ``migrate_out``, DESIGN.md §9).
 """
 from __future__ import annotations
 

@@ -621,7 +621,22 @@ class FlowServe:
             n_pages = payload.get("n_pages")
             if n_pages is None:
                 n_pages = payload["k"].shape[1]
-            seq.pages = self.pool.alloc(n_pages)
+            # allocate through the RTC when present: cached (zero-ref)
+            # prefix pages are evicted COHERENTLY with the index, so a
+            # decode TE whose pool filled up with preserved prefixes can
+            # still admit migrations; true pressure raises BEFORE any
+            # sequence state is committed (backpressure, DESIGN.md §9)
+            seq.pages = []
+            try:
+                for _ in range(n_pages):
+                    seq.pages.append(self.rtc.append_block() if self.rtc
+                                     else self.pool.alloc(1)[0])
+            except OutOfPagesError:
+                self.pool.release(seq.pages)
+                self._seqs.pop(req.req_id, None)
+                self._requests.pop(req.req_id, None)
+                self.sample_params.pop(req.req_id, None)
+                raise
             handle = payload.get("kv_handle")
             if handle is not None:
                 # async migration (DistFlow v2): KV chunks are still in
@@ -641,7 +656,7 @@ class FlowServe:
                     f"decode TE {self.name} has no free slot for migrated "
                     f"request {req.req_id}")
             self.runner.import_kv(payload, seq)
-        self.scheduler.running.append(seq)
+        self.scheduler.admit_running(seq)
         return req.req_id
 
     # ---------------------------------------------------------------- internals
@@ -755,3 +770,54 @@ class FlowServe:
     # stats -------------------------------------------------------------
     def prefix_cache_stats(self) -> Dict[str, int]:
         return dict(self.rtc.stats) if self.rtc else {}
+
+    def load_metrics(self) -> Dict[str, float]:
+        """Real load signals for the JE's live TEHandle adapter
+        (DESIGN.md §9), replacing the hand-maintained floats:
+
+        * ``queued_prefill_tokens`` — prefill tokens still owed to queued
+          sequences (``Scheduler.queued_prefill_tokens``);
+        * ``inflight_decode_tokens`` — remaining ``max_new_tokens`` budget
+          of every sequence resident in THIS engine (queued or decoding;
+          in-flight fused horizons count via ``_pending``). A PD pair's
+          sequences live in exactly one endpoint at a time, so summing the
+          pair never double-counts;
+        * ``horizon_headroom`` — the fused multi-step horizon the scheduler
+          can currently prove (§8): a TE decoding K steps per dispatch
+          serves its decode budget cheaper, which the JE folds into the
+          load comparison;
+        * ``n_queued`` / ``n_running`` / ``occupancy`` /
+          ``free_page_frac`` — queue-depth and capacity signals.
+        """
+        sch = self.scheduler
+        decode_toks = 0
+        running_rem = []
+        running = set(id(s) for s in sch.running)
+        for seq in self._seqs.values():
+            sp = self.sample_params.get(seq.seq_id)
+            if sp is None:
+                continue
+            produced = (max(0, len(seq.tokens) - seq.n_prompt)
+                        + self._pending.get(seq.seq_id, 0))
+            rem = max(0, sp.max_new_tokens - produced)
+            decode_toks += rem
+            if id(seq) in running:
+                running_rem.append(rem)
+        headroom = 1
+        if (self.runner_kind == "paged" and self.ecfg.fused_decode
+                and running_rem):
+            # same proof the fused path runs (§8): the budget term is the
+            # batch's min remaining max_new_tokens, not the horizon cap
+            headroom = sch.safe_horizon(list(sch.running),
+                                        self.ecfg.decode_horizon,
+                                        max(1, min(running_rem)))
+        return {
+            "queued_prefill_tokens": float(sch.queued_prefill_tokens()),
+            "inflight_decode_tokens": float(decode_toks),
+            "horizon_headroom": float(max(1, headroom)),
+            "n_queued": sch.queue_depth(),
+            "n_running": len(sch.running),
+            "occupancy": sch.occupancy(),
+            "free_page_frac": (self.pool.free_page_count() / self.pool.n_pages
+                               if self.pool is not None else 1.0),
+        }

@@ -170,7 +170,35 @@ class Scheduler:
             return 1
         return min(k_target, budget)
 
+    # ------------------------------------------------------------ metrics
+    def queued_seqs(self) -> List[SequenceState]:
+        """Every sequence admitted but not yet fully prefilled."""
+        return (list(self.waiting) + list(self.ready)
+                + [s for s, _ in self.prefetching] + list(self.prefilling))
+
+    def queued_prefill_tokens(self) -> int:
+        """Prefill tokens still owed to queued sequences — the prefill half
+        of the JE's live load signal (DESIGN.md §9)."""
+        return sum(max(0, len(s.tokens) - 1 - s.n_cached)
+                   for s in self.queued_seqs())
+
+    def queue_depth(self) -> int:
+        return (len(self.waiting) + len(self.ready) + len(self.prefetching)
+                + len(self.prefilling))
+
+    def occupancy(self) -> float:
+        """Fraction of the decode batch in use (0 ⇒ idle, ≥1 ⇒ saturated —
+        running may exceed the per-step batch; plans slice it)."""
+        return len(self.running) / max(1, self.cfg.max_decode_batch)
+
     # ------------------------------------------------------------ commits
+    def admit_running(self, seq: SequenceState) -> None:
+        """Decode-TE admission of a migrated-in sequence (the PD-pair
+        steady path, DESIGN.md §9): the sequence arrives fully prefilled —
+        its KV may still be in flight (``_kv_pending``) — and joins the
+        decode set directly, bypassing the prefill queues."""
+        self.running.append(seq)
+
     def on_prefill_progress(self, seq: SequenceState, done: bool) -> None:
         if done:
             if seq in self.prefilling:

@@ -3,6 +3,10 @@ autoscaler into a runnable deployment (CPU: smoke-config models).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b \
         --mode colocated --requests 16
+
+    # the live serving plane (DESIGN.md §9): Algorithm 1 over a real fleet
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b \
+        --topology pd=1,colo=1 --policy dist_sched --requests 16
 """
 from __future__ import annotations
 
@@ -50,6 +54,15 @@ def main() -> None:
     ap.add_argument("--no-fused-decode", action="store_true",
                     help="legacy v1 decode path (per-step host block tables "
                          "+ standalone sampler dispatch)")
+    ap.add_argument("--topology", default=None,
+                    help="live serving plane (DESIGN.md §9): fleet spec "
+                         "'pd=N,colo=N' — N PD-disaggregated 1P+1D pairs "
+                         "plus N PD-colocated TEs (tp/horizon flags apply "
+                         "per TE). Overrides --mode.")
+    ap.add_argument("--policy", default="dist_sched",
+                    choices=["dist_sched", "round_robin"],
+                    help="JE placement policy for --topology (Algorithm 1 "
+                         "vs the degenerate round-robin baseline)")
     args = ap.parse_args()
     if args.tp > 1:
         print(f"TE mesh: 1x{args.tp} over {jax.device_count()} visible devices")
@@ -60,6 +73,45 @@ def main() -> None:
     sp = SamplingParams(temperature=0.0, max_new_tokens=args.max_new,
                         stop_on_eos=False)
     prompts = [f"request {i}: explain serverless llm serving" for i in range(args.requests)]
+
+    if args.topology:
+        from repro.core.scaling import (DRAMPageCache, FastScaler,
+                                        LoadSpreadTrigger)
+        from repro.core.serving_plane import ServingJobEngine, TopologySpec
+        topo = TopologySpec.parse(args.topology)
+        if args.tp > 1:
+            if topo.tp > 1 and topo.tp != args.tp:
+                raise SystemExit(f"conflicting tp: --tp {args.tp} vs "
+                                 f"--topology ...,tp={topo.tp}")
+            topo.tp = args.tp
+        cfg_full = get_config(args.arch)
+        hs = HeatmapStudy(cfg_full)
+        ecfg = EngineConfig(tp=topo.tp, n_pages=256, page_size=8,
+                            max_batch_tokens=64, chunk_size=16,
+                            max_decode_batch=8, decode_horizon=args.horizon,
+                            fused_decode=not args.no_fused_decode)
+        je = ServingJobEngine(bundle, params, topo, heatmap=hs.combined(),
+                              prefill_lens=hs.prefill_lens,
+                              decode_ratios=hs.decode_ratios,
+                              policy=args.policy, ecfg=ecfg,
+                              scaler=FastScaler(DRAMPageCache()),
+                              trigger=LoadSpreadTrigger())
+        t0 = time.monotonic()
+        for p in prompts:
+            je.submit(tok.encode(p), sampling=sp)
+        comps = je.run_to_completion()
+        dt = time.monotonic() - t0
+        n_tok = sum(len(c.tokens) for c in comps)
+        ttft = sum(c.ttft for c in comps) / max(1, len(comps))
+        tpot = sum(c.tpot for c in comps) / max(1, len(comps))
+        print(f"serving plane [{args.policy}] topology={args.topology}: "
+              f"{len(comps)} completions in {dt:.2f}s ({n_tok/dt:.1f} tok/s) "
+              f"ttft={ttft*1e3:.0f}ms tpot={tpot*1e3:.1f}ms")
+        print(f"  decisions={je.scheduler.decisions} "
+              f"scale_events={len(je.scale_events)}")
+        for te_id, m in je.fleet_metrics().items():
+            print(f"  {te_id}: type={m['type']} load={m['load']:.1f}")
+        return
 
     if args.mode == "colocated":
         te = build_te(bundle, params, "colocated", "te-0", tp=args.tp,

@@ -1,0 +1,45 @@
+"""Docs-consistency checks (ISSUE-4 CI satellite).
+
+The repo's convention (DESIGN.md preamble) is that ``DESIGN.md §N``
+citations in ``src/`` docstrings/comments are load-bearing references;
+these tests keep them from rotting: every cited section must exist, and
+the README must document every benchmark key ``benchmarks/run.py`` knows.
+"""
+import re
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def test_design_section_citations_resolve():
+    design = (ROOT / "DESIGN.md").read_text()
+    sections = set(re.findall(r"^## §(\d+)", design, re.M))
+    assert sections, "DESIGN.md lost its '## §N' section headers"
+    unresolved = {}
+    for py in sorted((ROOT / "src").rglob("*.py")):
+        cited = set(re.findall(r"DESIGN\.md §(\d+)", py.read_text()))
+        bad = cited - sections
+        if bad:
+            unresolved[str(py.relative_to(ROOT))] = sorted(bad)
+    assert not unresolved, (
+        f"DESIGN.md §-citations pointing at missing sections: {unresolved}")
+
+
+def test_readme_documents_every_bench_key():
+    readme = (ROOT / "README.md").read_text()
+    harness = (ROOT / "benchmarks" / "run.py").read_text()
+    keys = re.findall(r'^\s*\("([a-z0-9_]+)",\s*"benchmarks\.', harness,
+                      re.M)
+    assert keys, "benchmarks/run.py MODULES table not found"
+    missing = [k for k in keys if f"`{k}`" not in readme]
+    assert not missing, (
+        f"README benchmark index is missing run.py keys: {missing}")
+
+
+def test_readme_documents_every_make_target():
+    readme = (ROOT / "README.md").read_text()
+    makefile = (ROOT / "Makefile").read_text()
+    targets = re.findall(r"^([a-z][a-z0-9-]*):.*##", makefile, re.M)
+    assert targets, "Makefile lost its '## help' annotations"
+    missing = [t for t in targets if f"make {t}" not in readme]
+    assert not missing, f"README is missing make targets: {missing}"

@@ -77,6 +77,34 @@ def test_round_robin_cycles(heat):
     assert picks[4:] == picks[:4]
 
 
+def test_complete_releases_actual_consumption():
+    """ISSUE-4 bugfix: a request predicted at 8 decode tokens actually
+    decoded 20. Callers that track real progress (the live plane's
+    ``refresh``, sims decaying load per generated token) fold the extra
+    work into ``te.load``; completion must release the ACTUAL consumption
+    — subtracting the stale prediction leaves +12 phantom tokens behind
+    per request, drifting the load signal upward over a long run."""
+    ds = DistributedScheduler([TEHandle("a", "colocated")], np.ones((1, 1)),
+                              [16], [1.0])
+    te = ds.tes["a"]
+    for _ in range(25):
+        req = SchedRequest(tokens=list(range(10)), predicted_decode=8)
+        ds.commit(req, te)
+        te.load += 20 - req.predicted_decode   # live signal: decode ran long
+        ds.complete(req, te, actual_decode=20)
+    assert te.load == 0.0
+    # without the observed length the prediction is still the fallback
+    req = SchedRequest(tokens=list(range(10)), predicted_decode=8)
+    ds.commit(req, te)
+    ds.complete(req, te)
+    assert te.load == 0.0
+    # and over-release clamps at zero instead of going negative
+    te.load = 5.0
+    ds.complete(SchedRequest(tokens=[1, 2], predicted_decode=0), te,
+                actual_decode=100)
+    assert te.load == 0.0
+
+
 def test_global_prompt_tree_longest_match():
     gt = GlobalPromptTree()
     gt.record([1, 2, 3, 4], "a")

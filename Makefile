@@ -5,7 +5,7 @@
 PYTEST   := PYTHONPATH=src python -m pytest
 XLA_HOST := XLA_FLAGS="--xla_force_host_platform_device_count=8"
 
-.PHONY: tier1 fast bench-tp bench-pd bench-hotloop bench-serving bench help
+.PHONY: tier1 fast test-fleet bench-tp bench-pd bench-hotloop bench-serving bench help
 
 tier1:  ## full tier-1 suite (ROADMAP.md verify command) on 8 simulated devices
 	$(XLA_HOST) $(PYTEST) -x -q
@@ -22,8 +22,14 @@ bench-pd:  ## PD KV-migration: host-gather v1 vs sharded device path at tp in {1
 bench-hotloop:  ## decode hot loop: v1 host-driven vs v2 fused/multi-step at tp in {1,2,4}
 	PYTHONPATH=src python benchmarks/bench_decode_hotloop.py
 
-bench-serving:  ## live serving plane: Algorithm 1 vs round-robin over a PD pair + colocated TE
-	PYTHONPATH=src python benchmarks/bench_serving_plane.py
+FLEET_THREADS ?= 4
+
+bench-serving:  ## live serving plane: Algorithm 1 vs RR + fleet-threads axis + scale-in (FLEET_THREADS=N)
+	$(XLA_HOST) PYTHONPATH=src python benchmarks/bench_serving_plane.py \
+		--fleet-threads $(FLEET_THREADS)
+
+test-fleet:  ## just the multi-TE elastic-fleet lifecycle suite (slow lane)
+	$(XLA_HOST) $(PYTEST) -x -q -m fleet
 
 bench:  ## full paper-figure benchmark harness (XLA_HOST so tp_engine gets devices)
 	$(XLA_HOST) PYTHONPATH=src python -m benchmarks.run

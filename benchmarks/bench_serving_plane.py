@@ -16,8 +16,20 @@ the TTFT SLO per wall second), tok/s, the Algorithm-1 decision counters,
 and per-request greedy-token PARITY against a single colocated TE serving
 the same closed loop — the placement layer must never change tokens.
 
+Two elastic-fleet axes ride along (core/fleet.py):
+
+* ``--fleet-threads N`` — the SAME deterministic batch through an
+  identical fleet stepped serially vs over per-TE executor threads:
+  reports the wall-clock speedup at EQUAL policy decisions and greedy
+  parity (every placement happens before the first step, so the decision
+  stream cannot depend on thread interleaving);
+* scale-in scenario — a skewed burst forks a TE (LoadSpreadTrigger),
+  the post-burst idle drains one (DrainTrigger → §7 migrate-out →
+  RELEASED): reports peak vs final SERVING TEs and burst parity vs the
+  single-TE reference.
+
     PYTHONPATH=src python benchmarks/bench_serving_plane.py [--requests 12]
-        [--rps 8] [--max-wall 120]
+        [--rps 8] [--max-wall 120] [--fleet-threads 4]
 
 Also exposes run() -> CSV rows for benchmarks/run.py (key
 ``serving_plane``; ``--json`` → BENCH_serving_plane.json).
@@ -155,13 +167,13 @@ def _metrics(done: dict, wall: float, slo_ttft: float) -> dict:
 
 # --------------------------------------------------------------- harness
 def _plane(bundle, params, topo: TopologySpec, policy: str,
-           heat) -> ServingJobEngine:
+           heat, **kw) -> ServingJobEngine:
     hm, lens, ratios = heat
     ecfg = EngineConfig(n_pages=256, page_size=8, max_batch_tokens=64,
                         chunk_size=16, max_decode_batch=8)
     return ServingJobEngine(bundle, params, topo, heatmap=hm,
                             prefill_lens=lens, decode_ratios=ratios,
-                            policy=policy, ecfg=ecfg)
+                            policy=policy, ecfg=ecfg, **kw)
 
 
 def _warm(je: ServingJobEngine) -> None:
@@ -208,6 +220,124 @@ def bench(n: int = 9, rps: float = 1.5, max_wall: float = 150.0,
     return results
 
 
+def bench_fleet_axis(threads: int = 4, n_units: int = 3, n_req: int = 9,
+                     prompt_len: int = 200, max_new: int = 32,
+                     reps: int = 3) -> dict:
+    """Serial vs concurrent stepping of the SAME fleet (core/fleet.py).
+
+    One plane of ``n_units`` colocated TEs — each on its OWN device window
+    (tp=1 per-TE device pinning, DESIGN.md §9) — serves identical-shape
+    batches with ``fleet_threads`` toggled per phase, interleaved
+    best-of-``reps`` (the bench_decode_hotloop protocol, so late jit
+    buckets can't bias either mode). Every request is submitted before
+    the first step, so all Algorithm-1 decisions happen up front and must
+    be IDENTICAL across every phase — the executor layer may only change
+    wall-clock, never placement (token parity serial-vs-threaded on one
+    batch is enforced by tests/test_fleet_lifecycle.py).
+
+    The model is a bench-scale config (d_model 256 vs the smoke 64): at
+    smoke scale a step is pure host-side python and the GIL serializes it,
+    so per-dispatch device work has to be real for executor overlap to be
+    visible at all — which is exactly the production regime."""
+    from dataclasses import replace as _drep
+
+    from repro.configs.base import get_config, smoke_config
+    cfg = _drep(smoke_config(get_config("qwen3-8b")), name="qwen3-8b-bench",
+                d_model=256, n_heads=8, head_dim=32, d_ff=512)
+    bundle = get_model(cfg)
+    params = bundle.init_params(jax.random.PRNGKey(0), jnp.float32)
+    heat = (-np.ones((2, 2)), [24, 84], [0.1, 3.0])
+    ecfg = EngineConfig(n_pages=128, page_size=8, max_batch_tokens=128,
+                        chunk_size=64, max_decode_batch=4)
+    je = ServingJobEngine(bundle, params, TopologySpec(pd=0, colo=n_units),
+                          heatmap=heat[0], prefill_lens=heat[1],
+                          decode_ratios=heat[2], ecfg=ecfg)
+    sp = SamplingParams(temperature=0.0, max_new_tokens=max_new,
+                        stop_on_eos=False)
+    seed = [0]
+
+    def phase(ft: int):
+        je.fleet_threads = ft
+        seed[0] += 1
+        rng = np.random.RandomState(1000 + seed[0])
+        d0 = dict(je.scheduler.decisions)
+        for _ in range(n_req):
+            je.submit(_tok(rng, prompt_len, 3, 200), sampling=sp)
+        t0 = time.monotonic()
+        n_done = len(je.run_to_completion())
+        return (time.monotonic() - t0,
+                {k: je.scheduler.decisions[k] - d0[k] for k in d0}, n_done)
+
+    phase(0), phase(0)                    # warm twice: late-bucket compiles
+    s_walls, t_walls, decs, dones = [], [], [], []
+    for _ in range(reps):
+        w, d, n_done = phase(1)
+        s_walls.append(w); decs.append(d); dones.append(n_done)
+        w, d, n_done = phase(threads)
+        t_walls.append(w); decs.append(d); dones.append(n_done)
+    je.close()
+    return {
+        "serial": {"wall_s": min(s_walls), "walls": s_walls},
+        "threads": {"wall_s": min(t_walls), "walls": t_walls},
+        "threads_n": threads,
+        "n_units": n_units,
+        "n": n_req,
+        "speedup": min(s_walls) / max(1e-9, min(t_walls)),
+        "decisions_equal": all(d == decs[0] for d in decs),
+        "all_completed": all(n == n_req for n in dones),
+    }
+
+
+def bench_scale_in(bundle, params, heat) -> dict:
+    """Elastic scale-out THEN scale-in (DESIGN.md §9): a skewed burst
+    breaches LoadSpreadTrigger (NPU-fork), the post-burst idle breaches
+    DrainTrigger (drain → §7 migrate-out → RELEASED + device window
+    freed). Ends with fewer SERVING TEs than peak; every burst request
+    keeps greedy parity vs a single colocated TE."""
+    from repro.core.scaling import (DrainTrigger, DRAMPageCache, FastScaler,
+                                    LoadSpreadTrigger)
+    sp = SamplingParams(temperature=0.0, max_new_tokens=12,
+                        stop_on_eos=False)
+    prompts = [_tok(np.random.RandomState(31 + i), 64 if i % 2 == 0 else 6,
+                    3, 200) for i in range(8)]
+    ref = _plane(bundle, params, TopologySpec(pd=0, colo=1),
+                 "round_robin", heat)
+    _warm(ref)
+    ref_ids = [ref.submit(list(p), sampling=sp) for p in prompts]
+    ref_toks = {c.req_id: list(c.tokens) for c in ref.run_to_completion()}
+    # round-robin alternates TEs; alternating huge/tiny prompts skews load
+    je = _plane(bundle, params, TopologySpec(pd=0, colo=2), "round_robin",
+                heat, scaler=FastScaler(DRAMPageCache()),
+                trigger=LoadSpreadTrigger(threshold=0.5, patience=2,
+                                          min_load=4.0, max_fires=2),
+                drain_trigger=DrainTrigger(low_watermark=2.0, patience=4,
+                                           min_serving=1))
+    _warm(je)
+    n_warm = len(je.completions)          # exclude warmup from parity
+    rids = [je.submit(list(p), sampling=sp) for p in prompts]
+    peak = je.n_serving()
+    t0 = time.monotonic()
+    while je.has_work():
+        je.step()
+        peak = max(peak, je.n_serving())
+    for _ in range(200):                  # post-burst idle: drains fire
+        je.step()
+        if not je.has_work() and je.n_serving() < peak:
+            break
+    comps = {c.req_id: list(c.tokens) for c in je.completions[n_warm:]}
+    kinds = [e["kind"] for e in je.scale_events]
+    return {
+        "peak_serving": peak,
+        "final_serving": je.n_serving(),
+        "forks": kinds.count("fork"),
+        "releases": kinds.count("release"),
+        "wall_s": time.monotonic() - t0,
+        "parity": (len(comps) == len(ref_toks)
+                   and all(comps.get(r) == ref_toks[ri]
+                           for r, ri in zip(rids, ref_ids))),
+    }
+
+
 def run() -> list:
     """CSV rows for benchmarks/run.py: (name, value, derived)."""
     rows = []
@@ -234,6 +364,25 @@ def run() -> list:
     rows.append(("serving_plane_dist_sched_wins", float(len(wins)),
                  f"mixes_where_dist_sched_beats_rr_on_ttft_or_goodput="
                  f"{','.join(wins) or 'none'}"))
+    fa = bench_fleet_axis()
+    rows.append((
+        "serving_plane_fleet_speedup", fa["speedup"],
+        f"serial_s={fa['serial']['wall_s']:.2f};"
+        f"threads_s={fa['threads']['wall_s']:.2f};"
+        f"fleet_threads={fa['threads_n']};units={fa['n_units']};"
+        f"decisions_equal={fa['decisions_equal']};"
+        f"all_completed={fa['all_completed']};n={fa['n']}"))
+    bundle = get_model("qwen3-8b", smoke=True)
+    params = bundle.init_params(jax.random.PRNGKey(0), jnp.float32)
+    heat = (np.asarray([[-1.0, -1.0], [+1.0, -1.0]]), [24, 84], [0.1, 3.0])
+    si = bench_scale_in(bundle, params, heat)
+    rows.append((
+        "serving_plane_scale_in", float(si["peak_serving"]
+                                        - si["final_serving"]),
+        f"peak_serving={si['peak_serving']};"
+        f"final_serving={si['final_serving']};"
+        f"forks={si['forks']};releases={si['releases']};"
+        f"parity={si['parity']}"))
     return rows
 
 
@@ -243,6 +392,10 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=9)
     ap.add_argument("--rps", type=float, default=1.5)
     ap.add_argument("--max-wall", type=float, default=150.0)
+    ap.add_argument("--fleet-threads", type=int, default=4,
+                    help="concurrent axis: per-TE executor threads for the "
+                         "serial-vs-concurrent wall-clock comparison "
+                         "(core/fleet.py); 0 skips the axis")
     args = ap.parse_args()
 
     print(f"devices={jax.device_count()} arch={args.arch}-smoke "
@@ -262,6 +415,21 @@ def main() -> None:
                   f"{m['ttft_mean_ms']:>6.0f}ms {m['ttft_p90_ms']:>6.0f}ms "
                   f"{m['tpot_ms']:>5.1f}ms {m['goodput_rps']:>8.2f} "
                   f"{m['tok_s']:>7.1f} {m.get('parity', '-')!s:>7}  {dec_s}")
+
+    if args.fleet_threads > 1:
+        fa = bench_fleet_axis(threads=args.fleet_threads)
+        print(f"\nfleet executors ({fa['n_units']} colocated units, "
+              f"best-of-3 interleaved): serial {fa['serial']['wall_s']:.2f}s "
+              f"vs {fa['threads_n']} threads {fa['threads']['wall_s']:.2f}s "
+              f"-> {fa['speedup']:.2f}x (decisions_equal="
+              f"{fa['decisions_equal']} all_completed={fa['all_completed']})")
+    bundle = get_model(args.arch, smoke=True)
+    params = bundle.init_params(jax.random.PRNGKey(0), jnp.float32)
+    heat = (np.asarray([[-1.0, -1.0], [+1.0, -1.0]]), [24, 84], [0.1, 3.0])
+    si = bench_scale_in(bundle, params, heat)
+    print(f"scale-in: peak {si['peak_serving']} SERVING TEs -> final "
+          f"{si['final_serving']} (forks={si['forks']} "
+          f"releases={si['releases']} parity={si['parity']})")
 
 
 if __name__ == "__main__":

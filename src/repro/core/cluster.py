@@ -15,6 +15,7 @@ from typing import Any, Callable, Dict, List, Optional
 
 from repro.core.abstractions import (Job, JobKind, Status, Task, TaskKind,
                                      UserRequest, decompose)
+from repro.core.fleet import TEState, advance
 from repro.core.scaling import FastScaler, ModelAsset
 from repro.core.scheduling import DistributedScheduler, SchedRequest, TEHandle
 
@@ -30,8 +31,20 @@ class TaskExecutor:
     te_type: str                         # "colocated" | "prefill" | "decode"
     engine: Any = None                   # FlowServe (live) or sim cost model
     healthy: bool = True
+    state: TEState = TEState.SERVING     # lifecycle (core/fleet.py)
     last_heartbeat: float = field(default_factory=time.monotonic)
     tasks_done: int = 0
+
+    def transition(self, new: TEState) -> TEState:
+        """Validated lifecycle walk; illegal transitions raise."""
+        self.state = advance(self.state, new)
+        return self.state
+
+    def drained(self) -> bool:
+        """A DRAINING TE is releasable once its engine holds no work."""
+        return self.state is TEState.DRAINING and (
+            self.engine is None or not getattr(self.engine, "has_work",
+                                               lambda: False)())
 
     def heartbeat(self) -> None:
         self.last_heartbeat = time.monotonic()
@@ -130,6 +143,8 @@ class ClusterManager:
         self.te_factory = te_factory or (lambda te_id: TaskExecutor(te_id, "colocated"))
         self.tes: Dict[str, TaskExecutor] = {}
         self.jes: Dict[str, JobExecutor] = {}
+        self._te_seq = 0                 # monotonic: drain holes must not
+        #                                  recycle a live TE's id
         self._last_scale = 0.0
         self.heartbeat_timeout = heartbeat_timeout
         self.scale_log: List[Dict[str, Any]] = []
@@ -150,6 +165,11 @@ class ClusterManager:
                   now: Optional[float] = None) -> int:
         """Returns TE delta applied (positive = scaled up)."""
         now = now if now is not None else time.monotonic()
+        # earlier drains may have emptied since the last evaluation — reap
+        # on EVERY tick (a victim that lingered past its drain decision
+        # would otherwise leak: the low-load branch is gated on
+        # n_serving() > min_tes and can stop re-entering forever)
+        self.reap_drained()
         if now - self._last_scale < self.cfg.cooldown_s:
             return 0
         n = len(self.tes)
@@ -159,19 +179,43 @@ class ClusterManager:
             delta = min(max(1, n), self.cfg.max_tes - n)   # double, capped
             for _ in range(delta):
                 ev = self.scaler.scale_one(self.asset, optimized=True)
-                te = self.te_factory(f"te-{len(self.tes)}")
+                while f"te-{self._te_seq}" in self.tes:   # externally
+                    self._te_seq += 1                     # registered ids
+                te = self.te_factory(f"te-{self._te_seq}")
+                self._te_seq += 1
                 self.tes[te.te_id] = te
                 self.scale_log.append({"dir": "up", "event": ev.total,
                                        "path": ev.path, "t": now})
-        elif load < self.cfg.low_load and n > self.cfg.min_tes:
-            delta = -1
-            victim = next(reversed(self.tes))
-            self.scaler.release(victim)
-            del self.tes[victim]
-            self.scale_log.append({"dir": "down", "t": now})
+        elif load < self.cfg.low_load and self.n_serving() > self.cfg.min_tes:
+            # scale-in is a DRAIN, not a delete (lifecycle, core/fleet.py):
+            # the victim stops admitting, empties, then reap_drained()
+            # releases its resources — a TE with no engine drains instantly
+            victim = next((self.tes[tid] for tid in reversed(self.tes)
+                           if self.tes[tid].state is TEState.SERVING), None)
+            if victim is not None:
+                delta = -1
+                victim.transition(TEState.DRAINING)
+                self.scale_log.append({"dir": "down", "te_id": victim.te_id,
+                                       "t": now})
+                self.reap_drained()
         if delta:
             self._last_scale = now
         return delta
+
+    def n_serving(self) -> int:
+        return sum(1 for te in self.tes.values()
+                   if te.state is TEState.SERVING)
+
+    def reap_drained(self) -> List[str]:
+        """Release every DRAINING TE that has emptied: transition to
+        RELEASED, return its pre-warm resources, drop it from membership."""
+        released = []
+        for te_id in [t for t, te in self.tes.items() if te.drained()]:
+            self.tes[te_id].transition(TEState.RELEASED)
+            self.scaler.release(te_id)
+            del self.tes[te_id]
+            released.append(te_id)
+        return released
 
     def register_te(self, te: TaskExecutor) -> None:
         self.tes[te.te_id] = te

@@ -1,0 +1,146 @@
+"""Elastic fleet runtime (DESIGN.md §9): TE lifecycle + per-TE executors.
+
+Two pieces the serving plane composes:
+
+* **TE lifecycle state machine** — every fleet member walks
+  ``PROVISIONING → WARMING → SERVING ⇄ DRAINING → RELEASED``. Transitions
+  are validated (`advance`); anything else raises ``LifecycleError``. Only
+  SERVING TEs admit new placements; a DRAINING TE keeps stepping until its
+  in-flight requests complete or migrate out (§7 sharded path), then its
+  device window is RELEASED for reuse by a future fork. DRAINING → SERVING
+  models drain-cancel on a load resurgence.
+
+* **FleetExecutor** — thread-per-TE-unit execution so engines genuinely
+  overlap wall-clock work. A *unit* is what the old serial loop iterated:
+  one PD group (its prefill members, the intra-group handoff pump, its
+  decode members) or one colocated TE — so a worker never touches another
+  unit's engines and the per-unit event stream stays ordered. The JE
+  submits one step event per unit and collects result events from a single
+  barrier-free completion queue (results surface in finish order, not
+  submit order); cross-unit actions (placement, drain migration, scaling)
+  stay on the driver thread between steps. jit dispatches release the GIL,
+  which is where the overlap comes from on CPU and the whole point on real
+  accelerators.
+"""
+from __future__ import annotations
+
+import enum
+import queue
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+
+class TEState(str, enum.Enum):
+    PROVISIONING = "provisioning"   # pod/devices allocated, engine building
+    WARMING = "warming"             # weights resident, jit warmup running
+    SERVING = "serving"             # admitting + executing
+    DRAINING = "draining"           # admissions stopped; emptying (§9 scale-in)
+    RELEASED = "released"           # device window freed; terminal
+
+
+class LifecycleError(RuntimeError):
+    """Raised on an illegal TE state transition."""
+
+
+_LEGAL: Dict[TEState, Tuple[TEState, ...]] = {
+    TEState.PROVISIONING: (TEState.WARMING, TEState.RELEASED),
+    TEState.WARMING: (TEState.SERVING,),
+    TEState.SERVING: (TEState.DRAINING,),
+    TEState.DRAINING: (TEState.SERVING, TEState.RELEASED),
+    TEState.RELEASED: (),
+}
+
+
+def advance(current: TEState, new: TEState) -> TEState:
+    """Validate one lifecycle transition; returns ``new`` or raises."""
+    if new not in _LEGAL[current]:
+        raise LifecycleError(f"illegal TE transition {current.value} -> "
+                             f"{new.value} (legal: "
+                             f"{[s.value for s in _LEGAL[current]] or 'none'})")
+    return new
+
+
+_STOP = object()
+
+
+class _Worker:
+    """One daemon thread draining its own inbox into the shared results
+    queue. Units are PINNED to workers, so one unit's events always execute
+    in order on one thread (engines keep thread affinity)."""
+
+    def __init__(self, name: str, results: "queue.SimpleQueue"):
+        self.inbox: queue.SimpleQueue = queue.SimpleQueue()
+        self._results = results
+        self.thread = threading.Thread(target=self._run, name=name,
+                                       daemon=True)
+        self.thread.start()
+
+    def _run(self) -> None:
+        while True:
+            item = self.inbox.get()
+            if item is _STOP:
+                return
+            tag, fn = item
+            try:
+                self._results.put((tag, fn(), None))
+            except BaseException as exc:  # surfaced by collect()
+                self._results.put((tag, None, exc))
+
+
+class FleetExecutor:
+    """Submit/collect executor over at most ``n_threads`` pinned workers.
+
+    ``submit(unit_id, fn)`` enqueues ``fn`` on the worker the unit is
+    pinned to (units are assigned round-robin on first submit, so a fleet
+    larger than the thread budget shares workers without losing per-unit
+    ordering). ``collect(n)`` pops ``n`` completion events in FINISH order
+    — there is no inter-unit barrier inside the executor; the caller
+    decides how many events its step owes."""
+
+    def __init__(self, n_threads: int):
+        if n_threads < 1:
+            raise ValueError(f"n_threads must be >= 1, got {n_threads}")
+        self.n_threads = n_threads
+        self._results: queue.SimpleQueue = queue.SimpleQueue()
+        self._workers: List[_Worker] = []
+        self._pin: Dict[Any, _Worker] = {}
+        self._closed = False
+
+    def _worker_for(self, unit_id: Any) -> _Worker:
+        w = self._pin.get(unit_id)
+        if w is None:
+            if len(self._workers) < self.n_threads:
+                w = _Worker(f"fleet-worker-{len(self._workers)}",
+                            self._results)
+                self._workers.append(w)
+            else:
+                w = self._workers[len(self._pin) % self.n_threads]
+            self._pin[unit_id] = w
+        return w
+
+    def submit(self, unit_id: Any, fn: Callable[[], Any]) -> None:
+        if self._closed:
+            raise RuntimeError("executor closed")
+        self._worker_for(unit_id).inbox.put((unit_id, fn))
+
+    def collect(self, n: int) -> List[Tuple[Any, Any]]:
+        """Block until ``n`` events complete; returns [(unit_id, result)].
+        Collects ALL ``n`` before re-raising the first worker exception so
+        no event is left orphaned in the queue."""
+        out: List[Tuple[Any, Any]] = []
+        first_exc: Optional[BaseException] = None
+        for _ in range(n):
+            tag, result, exc = self._results.get()
+            if exc is not None and first_exc is None:
+                first_exc = exc
+            out.append((tag, result))
+        if first_exc is not None:
+            raise first_exc
+        return out
+
+    def close(self) -> None:
+        self._closed = True
+        for w in self._workers:
+            w.inbox.put(_STOP)
+        for w in self._workers:
+            w.thread.join(timeout=5.0)

@@ -122,6 +122,54 @@ def train_predictor(cfg: PredictorConfig, xs: np.ndarray, ys: np.ndarray,
     return params, acc
 
 
+class TraceEMAPredictor:
+    """Online decode-length estimator trained from completed-request traces
+    (DESIGN.md §9, the serving plane's default).
+
+    The offline MLP (``DecodeLengthPredictor``) needs a labeled corpus; the
+    live plane has something better — its own completions. Requests bucket
+    into a *mix* by log2 prompt length (the serving mixes — chat vs code vs
+    summarize vs agent turns — separate cleanly by prompt scale), and each
+    bucket keeps an exponential moving average of observed decode lengths.
+    ``ServingJobEngine`` calls ``observe`` per completion and
+    ``predict_tokens`` per placement, so ``SchedRequest.predicted_decode``
+    converges to the mix's real decode behavior instead of parroting the
+    sampling budget. Implements the same ``predict_tokens`` interface
+    ``DistributedScheduler.pd_aware`` already consumes."""
+
+    def __init__(self, alpha: float = 0.25, default_guess: int = 64,
+                 n_bins: int = 12):
+        self.alpha = alpha
+        self.default_guess = default_guess
+        self.n_bins = n_bins
+        self._ema: dict = {}            # bin -> EMA decode length
+        self._count: dict = {}          # bin -> observations
+
+    def _bin(self, prompt_tokens) -> int:
+        n = max(1, len(prompt_tokens))
+        return min(self.n_bins - 1, int(math.log2(n)))
+
+    def observe(self, prompt_tokens, decode_len: int) -> None:
+        b = self._bin(prompt_tokens)
+        cur = self._ema.get(b)
+        self._ema[b] = (float(decode_len) if cur is None
+                        else (1.0 - self.alpha) * cur
+                        + self.alpha * float(decode_len))
+        self._count[b] = self._count.get(b, 0) + 1
+
+    def predict_tokens(self, prompt_tokens) -> int:
+        b = self._bin(prompt_tokens)
+        if b in self._ema:
+            return max(1, int(round(self._ema[b])))
+        if self._ema:               # nearest trained mix beats the default
+            nearest = min(self._ema, key=lambda k: abs(k - b))
+            return max(1, int(round(self._ema[nearest])))
+        return self.default_guess
+
+    def n_observations(self) -> int:
+        return sum(self._count.values())
+
+
 class DecodeLengthPredictor:
     """Inference-side wrapper used by PD-aware scheduling."""
 

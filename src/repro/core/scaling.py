@@ -221,6 +221,60 @@ class LoadSpreadTrigger:
 
 
 @dataclass
+class DrainTrigger:
+    """Scale-IN trigger (DESIGN.md §9) — the low-watermark twin of
+    ``LoadSpreadTrigger``: fire when the fleet's mean load per live TE
+    stays below ``low_watermark`` for ``patience`` consecutive
+    observations while more than ``min_serving`` TEs are serving. The
+    caller drains one TE (stop admissions → finish/migrate out → release
+    its device window).
+
+    Firing is one-shot per drain: the trigger disarms when it fires and
+    re-arms only when the caller reports the drain COMPLETE (``rearm()``,
+    called at RELEASED) or the mean load recovers above the watermark —
+    a draining TE's load migrating onto its peers keeps the fleet mean
+    low, so time-based re-arming would drain the whole fleet in one idle
+    spell. Mutual exclusion with the scale-out trigger is owned by the
+    serving plane: neither trigger is even fed while the other's action
+    is in flight (no fork-while-draining races)."""
+
+    low_watermark: float = 2.0          # mean tokens of work per live TE
+    patience: int = 8                   # consecutive low observations
+    min_serving: int = 1                # never drain below this many TEs
+    max_fires: int = 64
+    breach_steps: int = 0
+    armed: bool = True
+    fires: int = 0
+
+    def observe(self, loads: List[float], n_serving: Optional[int] = None
+                ) -> bool:
+        """Feed one observation of the live fleet's loads; True ⇒ drain one
+        TE now. ``n_serving`` defaults to ``len(loads)``."""
+        n = len(loads) if n_serving is None else n_serving
+        if n <= self.min_serving:
+            self.breach_steps = 0
+            return False
+        mean = sum(loads) / max(1, len(loads))
+        if mean > self.low_watermark:
+            self.breach_steps = 0
+            self.armed = True
+            return False
+        if not self.armed or self.fires >= self.max_fires:
+            return False
+        self.breach_steps += 1
+        if self.breach_steps < self.patience:
+            return False
+        self.armed = False
+        self.breach_steps = 0
+        self.fires += 1
+        return True
+
+    def rearm(self) -> None:
+        """Report the in-flight drain finished (TE reached RELEASED)."""
+        self.armed = True
+
+
+@dataclass
 class ScaleEvent:
     te_id: str
     steps: Dict[str, float]

@@ -22,6 +22,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.fleet import TEState, advance
 from repro.core.heatmap import lookup
 from repro.core.predictor import DecodeLengthPredictor
 from repro.engine.radix_tree import RadixTree
@@ -32,18 +33,67 @@ class TEHandle:
     te_id: str
     te_type: str                        # "colocated" | "pd_pair"
     load: float = 0.0                   # outstanding work (tokens)
+    prefill_load: float = 0.0           # refresh(): queued prefill tokens
+    decode_load: float = 0.0            # refresh(): in-flight decode budget
     n_running: int = 0
     engine: object = None               # live FlowServe (or sim TE);
-    #                                     pd_pair: the PREFILL-side engine
-    decode_engine: object = None        # pd_pair: the DECODE-side engine
+    #                                     pd_pair: the PRIMARY prefill engine
+    decode_engine: object = None        # pd_pair: the PRIMARY decode engine
+    # M:N PD groups (§4.6): a pd_pair handle may own several members per
+    # side; ``engine``/``decode_engine`` stay the primaries so every 1P:1D
+    # consumer is unchanged. None ⇒ the primary is the only member.
+    prefill_engines: Optional[List[object]] = None
+    decode_engines: Optional[List[object]] = None
+    state: TEState = TEState.SERVING    # lifecycle (core/fleet.py); stubs
+    #                                     and pre-§9 consumers start SERVING
     prompt_tree: RadixTree = field(default_factory=RadixTree)
 
     def record_prompt(self, tokens) -> None:
         self.prompt_tree.insert(tuple(tokens), self.te_id)
 
+    # ------------------------------------------------------------ lifecycle
+    def transition(self, new: TEState) -> TEState:
+        """Walk the PROVISIONING→…→RELEASED machine; illegal moves raise."""
+        self.state = advance(self.state, new)
+        return self.state
+
+    @property
+    def admitting(self) -> bool:
+        """Only SERVING TEs accept new placements (a DRAINING TE finishes
+        or migrates out what it has; everything else isn't runnable)."""
+        return self.state is TEState.SERVING
+
+    # ------------------------------------------------------------ members
+    def prefill_members(self) -> List[object]:
+        if self.prefill_engines is not None:
+            return list(self.prefill_engines)
+        return [self.engine] if self.engine is not None else []
+
+    def decode_members(self) -> List[object]:
+        if self.decode_engines is not None:
+            return list(self.decode_engines)
+        return [self.decode_engine] if self.decode_engine is not None else []
+
+    def grow_decode(self, engine: object) -> None:
+        """§4.6 M:N scale-out: add a decode member to this PD group."""
+        if self.decode_engines is None:
+            self.decode_engines = self.decode_members()
+        self.decode_engines.append(engine)
+        if self.decode_engine is None:
+            self.decode_engine = engine
+
+    def pick_decode_member(self) -> object:
+        """Algorithm-1 handoff extension (§4.6): the least-loaded decode
+        member takes the next prefilled request. Load is the same signal
+        ``refresh`` uses, read per member."""
+        members = self.decode_members()
+        if len(members) <= 1:
+            return members[0] if members else None
+        return min(members, key=_engine_load)
+
     def live_engines(self) -> List[object]:
         """The attached engines that expose real load signals."""
-        return [e for e in (self.engine, self.decode_engine)
+        return [e for e in (*self.prefill_members(), *self.decode_members())
                 if e is not None and hasattr(e, "load_metrics")]
 
     def refresh(self) -> float:
@@ -56,10 +106,13 @@ class TEHandle:
         currently prove (``Scheduler.safe_horizon``): a TE in steady
         single-batch decode serves K steps per host dispatch (DESIGN.md §8),
         so its marginal decode token is cheaper than one on a TE that is
-        interleaving prefill. A PD pair sums both endpoints — a sequence
+        interleaving prefill. A PD group sums every member — a sequence
         lives in exactly one of them at any time, so nothing double-counts.
-        Handles without live engines (the T3 sims, unit tests) keep their
-        hand-fed ``load`` float untouched."""
+        The prefill/decode split is kept (``prefill_load``/``decode_load``)
+        so the scaling layer can tell decode-dominated pressure (grow the
+        group's decode side, §4.6) from prefill pressure. Handles without
+        live engines (the T3 sims, unit tests) keep their hand-fed ``load``
+        float untouched."""
         engines = self.live_engines()
         if not engines:
             return self.load
@@ -72,9 +125,26 @@ class TEHandle:
             decode_toks += m["inflight_decode_tokens"]
             headroom = max(headroom, m["horizon_headroom"])
             n_active += m["n_queued"] + m["n_running"]
+        self.prefill_load = prefill_toks
+        self.decode_load = decode_toks
         self.load = prefill_toks + decode_toks / headroom
         self.n_running = n_active
         return self.load
+
+
+def _engine_load(eng) -> float:
+    """Per-member load (the refresh() signal for ONE engine)."""
+    m = eng.load_metrics()
+    return (m["queued_prefill_tokens"]
+            + m["inflight_decode_tokens"] / max(1.0, m["horizon_headroom"]))
+
+
+def _predictor_trained(pred) -> bool:
+    """An online (trace-EMA) predictor with zero observations has nothing
+    to say — callers fall back to the request's own estimate. Offline
+    predictors (no ``n_observations``) are always trained."""
+    n_obs = getattr(pred, "n_observations", None)
+    return n_obs is None or n_obs() > 0
 
 
 @dataclass
@@ -132,7 +202,11 @@ class DistributedScheduler:
 
     # ------------------------------------------------------ Algorithm 1
     def dist_sched(self, req: SchedRequest) -> TEHandle:
-        tes = list(self.tes.values())
+        # lifecycle gate (core/fleet.py): DRAINING/releasing TEs stop
+        # admitting — they finish or migrate out what they already hold
+        tes = [t for t in self.tes.values() if t.admitting]
+        if not tes:             # pathological (everything draining): any
+            tes = list(self.tes.values())   # placement beats dropping
         for te in tes:          # live handles pull real engine state (§9)
             te.refresh()
         tes = self.pd_aware(req, tes)
@@ -145,7 +219,7 @@ class DistributedScheduler:
     def pd_aware(self, req: SchedRequest, tes: List[TEHandle]) -> List[TEHandle]:
         p_len = len(req.tokens)
         d_len = req.predicted_decode
-        if self.predictor is not None:
+        if self.predictor is not None and _predictor_trained(self.predictor):
             d_len = self.predictor.predict_tokens(req.tokens)
         val = lookup(self.heatmap, self.prefill_lens, self.decode_ratios,
                      p_len, d_len)
@@ -204,12 +278,16 @@ class DistributedScheduler:
 
 
 def round_robin_scheduler(tes: List[TEHandle]):
-    """Baseline RR policy used in Figure 7's comparison."""
+    """Baseline RR policy used in Figure 7's comparison. Skips TEs that
+    stopped admitting (lifecycle gate) but stays degenerate otherwise."""
     state = {"i": 0}
 
     def pick(req: SchedRequest) -> TEHandle:
-        te = tes[state["i"] % len(tes)]
-        state["i"] += 1
-        return te
+        for _ in range(len(tes)):
+            te = tes[state["i"] % len(tes)]
+            state["i"] += 1
+            if te.admitting:
+                return te
+        return tes[state["i"] % len(tes)]   # nothing admitting: degrade
 
     return pick

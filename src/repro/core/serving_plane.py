@@ -1,63 +1,92 @@
-"""The live serving plane (DESIGN.md §9): a model-serving JE that owns a
-fleet of REAL FLOWSERVE TEs and routes requests through Algorithm 1.
+"""The live serving plane (DESIGN.md §9): a model-serving JE that owns an
+ELASTIC fleet of REAL FLOWSERVE TEs and routes requests through Algorithm 1.
 
 This is the layer that composes everything below it into the paper's
 system shape (§3): an external ``UserRequest`` decomposes into a serving
 ``Job`` whose ``Task``s (prefill/decode or colocated) land on live
 engines —
 
-* **PD-disaggregated pairs**: a prefill-mode TE runs chunked prefill,
-  then each finished request's KV migrates to the pair's decode-mode TE
-  over ``DistFlow.transfer_sharded`` (``FlowServe.migrate_out``, the §7
-  overlap path) — pumped every JE step, i.e. the steady path rather than
-  a test fixture;
+* **PD groups (M:N, §4.6)**: ``pd=N`` builds N 1P:1D pairs; ``pd=NpXd``
+  builds a group whose N prefill TEs feed X decode TEs. Each finished
+  prefill's KV migrates to the group's LEAST-LOADED decode member over
+  ``DistFlow.transfer_sharded`` (``FlowServe.migrate_out``, the §7 overlap
+  path) — pumped every JE step, i.e. the steady path rather than a test
+  fixture;
 * **PD-colocated TEs**: one engine runs both phases with chunked-prefill
   interleaving.
 
+The fleet is a real RUNTIME, not a for-loop (core/fleet.py):
+
+* **per-TE executors** — with ``fleet_threads > 1`` every fleet unit (one
+  PD group or one colocated TE) steps on its own pinned worker thread;
+  ``step()`` is submit/collect over a barrier-free event queue, so
+  engines overlap wall-clock work. ``FlowServe`` entry points are
+  executor-safe (per-engine RLock, dual-lock migration);
+* **lifecycle** — every TE walks ``PROVISIONING → WARMING → SERVING ⇄
+  DRAINING → RELEASED``; only SERVING TEs admit placements;
+* **scale-out** (``LoadSpreadTrigger``): sustained load spread NPU-forks
+  capacity from a live TE (§6.3) — a whole colocated TE, or just a new
+  decode member for the hottest PD group when the fleet's pressure is
+  decode-dominated (shortP/longD, §4.6);
+* **scale-IN** (``DrainTrigger``): sustained low watermark drains a TE —
+  admissions stop, in-flight decodes finish or migrate out over the §7
+  sharded path — then releases its device window for reuse by a future
+  fork. The two triggers are mutually exclusive per TE: nothing forks
+  while a drain is in flight and vice versa.
+
 Placement is ``DistributedScheduler.dist_sched`` (Algorithm 1) over live
 ``TEHandle`` adapters whose load signal comes from real engine state
-(queued prefill tokens, in-flight decode budget, fused-horizon headroom
-— ``FlowServe.load_metrics``), or ``round_robin_scheduler`` as the
-degenerate baseline policy. When the fleet's load spread stays above a
-threshold (``LoadSpreadTrigger``), the plane scales out: ``FastScaler``
-prices the 5-step pipeline while ``FlowServe.fork_from`` NPU-forks the
-weights from a live TE onto the new one (§6.3).
+(``FlowServe.load_metrics``), with ``SchedRequest.predicted_decode`` from
+the trace-trained EMA predictor (``TraceEMAPredictor``) rather than the
+sampling budget; ``round_robin_scheduler`` stays the degenerate baseline.
 
 TEs occupy DISJOINT device windows when ``tp > 1``
-(``EngineConfig.device_offset``), so PD migration and NPU-fork move
-bytes between genuinely different device sets.
+(``EngineConfig.device_offset``), so PD migration and NPU-fork move bytes
+between genuinely different device sets — and a RELEASED TE's window goes
+back on the free list.
 """
 from __future__ import annotations
 
+import re
 import time
 from collections import deque
 from dataclasses import dataclass, field, replace
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.abstractions import (Job, RequestType, Status, TaskKind,
                                      UserRequest, decompose)
-from repro.core.scaling import FastScaler, LoadSpreadTrigger, ModelAsset
+from repro.core.fleet import FleetExecutor, TEState
+from repro.core.predictor import TraceEMAPredictor
+from repro.core.scaling import (DrainTrigger, FastScaler, LoadSpreadTrigger,
+                                ModelAsset)
 from repro.core.scheduling import (DistSchedConfig, DistributedScheduler,
-                                   SchedRequest, TEHandle,
+                                   SchedRequest, TEHandle, _engine_load,
+                                   _predictor_trained,
                                    round_robin_scheduler)
 from repro.engine import EngineConfig, FlowServe, Request, SamplingParams
 from repro.engine.flowserve import Completion
 
+_PD_GROUP_RE = re.compile(r"^(\d+)p(\d+)d$")
+
 
 @dataclass
 class TopologySpec:
-    """Fleet shape: ``pd`` disaggregated 1P+1D pairs plus ``colo``
-    PD-colocated TEs, each TE an SPMD program over ``tp`` devices."""
+    """Fleet shape: PD groups plus ``colo`` PD-colocated TEs, each TE an
+    SPMD program over ``tp`` devices. ``pd=N`` means N disaggregated
+    1P:1D pairs; ``pd=NpXd`` (e.g. ``pd=1p2d``) means one M:N group of N
+    prefill TEs feeding X decode TEs (§4.6)."""
 
     pd: int = 0
     colo: int = 1
     tp: int = 1
+    pd_groups: List[Tuple[int, int]] = field(default_factory=list)
 
     @classmethod
     def parse(cls, spec: str) -> "TopologySpec":
         """Parse a ``--topology`` string: ``"pd=2,colo=2"``,
-        ``"pd=1,colo=1,tp=2"``."""
-        kw: Dict[str, int] = {}
+        ``"pd=1p2d,colo=1"``, ``"pd=1,colo=1,tp=2"``."""
+        kw: Dict[str, Any] = {}
+        groups: List[Tuple[int, int]] = []
         for part in spec.split(","):
             if not part.strip():
                 continue
@@ -65,15 +94,26 @@ class TopologySpec:
             key = key.strip()
             if not sep or key not in ("pd", "colo", "tp"):
                 raise ValueError(f"bad topology entry {part!r} in {spec!r} "
-                                 "(want pd=N,colo=N[,tp=N])")
-            kw[key] = int(val)
-        topo = cls(**kw)
-        if topo.pd + topo.colo < 1:
+                                 "(want pd=N|pd=NpXd,colo=N[,tp=N])")
+            m = _PD_GROUP_RE.match(val.strip()) if key == "pd" else None
+            if m is not None:
+                n_p, n_d = int(m.group(1)), int(m.group(2))
+                if n_p < 1 or n_d < 1:
+                    raise ValueError(f"empty PD group {val!r} in {spec!r}")
+                groups.append((n_p, n_d))
+            else:
+                kw[key] = int(val)
+        topo = cls(pd_groups=groups, **kw)
+        if not topo.groups() and topo.colo < 1:
             raise ValueError(f"empty topology {spec!r}")
         return topo
 
+    def groups(self) -> List[Tuple[int, int]]:
+        """(n_prefill, n_decode) per PD group; ``pd=N`` ⇒ N (1,1) pairs."""
+        return self.pd_groups + [(1, 1)] * self.pd
+
     def n_engines(self) -> int:
-        return 2 * self.pd + self.colo
+        return sum(p + d for p, d in self.groups()) + self.colo
 
 
 @dataclass
@@ -90,13 +130,17 @@ class _PlaneRequest:
 class ServingJobEngine:
     """Model-serving JE over a live FLOWSERVE fleet (DESIGN.md §9)."""
 
+    decode_dominance: float = 4.0   # decode/prefill load ratio ⇒ grow 1P:Xd
+
     def __init__(self, bundle, params, topology: TopologySpec, *,
                  heatmap, prefill_lens, decode_ratios, predictor=None,
                  policy: str = "dist_sched",
                  ecfg: Optional[EngineConfig] = None,
                  dcfg: Optional[DistSchedConfig] = None,
                  scaler: Optional[FastScaler] = None,
-                 trigger: Optional[LoadSpreadTrigger] = None):
+                 trigger: Optional[LoadSpreadTrigger] = None,
+                 drain_trigger: Optional[DrainTrigger] = None,
+                 fleet_threads: int = 0):
         if policy not in ("dist_sched", "round_robin"):
             raise ValueError(f"unknown policy {policy!r}")
         self.bundle = bundle
@@ -115,29 +159,53 @@ class ServingJobEngine:
                                  f"vs TopologySpec.tp={topology.tp}")
         self._base_ecfg = base
         self._offset_cursor = 0
+        self._free_windows: List[int] = []      # released device windows
+        self._window_of: Dict[str, int] = {}    # engine name -> owned window
         self.engines: List[FlowServe] = []
         self.policy = policy
         self.scaler = scaler
         self.trigger = trigger
+        self.drain_trigger = drain_trigger
         self.scale_events: List[Dict[str, Any]] = []
+        self.lifecycle_log: List[Tuple[int, str, str]] = []
         self.steps = 0
+        self.fleet_threads = fleet_threads
+        self._fleet: Optional[FleetExecutor] = None
 
         handles: List[TEHandle] = []
-        for i in range(topology.pd):
-            pe = self._spawn(f"te-pd{i}-p", "prefill")
-            de = self._spawn(f"te-pd{i}-d", "decode")
-            handles.append(TEHandle(f"te-pd{i}", "pd_pair",
-                                    engine=pe, decode_engine=de))
+        for gi, (n_p, n_d) in enumerate(topology.groups()):
+            handle = TEHandle(f"te-pd{gi}", "pd_pair",
+                              state=TEState.PROVISIONING)
+            pes = [self._spawn(f"te-pd{gi}-p{j}" if n_p > 1
+                               else f"te-pd{gi}-p", "prefill")
+                   for j in range(n_p)]
+            des = [self._spawn(f"te-pd{gi}-d{j}" if n_d > 1
+                               else f"te-pd{gi}-d", "decode")
+                   for j in range(n_d)]
+            handle.engine, handle.decode_engine = pes[0], des[0]
+            if n_p > 1:
+                handle.prefill_engines = pes
+            if n_d > 1:
+                handle.decode_engines = des
+            self._bring_up(handle)
+            handles.append(handle)
         for i in range(topology.colo):
-            ce = self._spawn(f"te-colo{i}", "colocated")
-            handles.append(TEHandle(f"te-colo{i}", "colocated", engine=ce))
-        # one M:N DistFlow peer group over the whole fleet (§4.6): PD pairs
+            handle = TEHandle(f"te-colo{i}", "colocated",
+                              state=TEState.PROVISIONING)
+            handle.engine = self._spawn(f"te-colo{i}", "colocated")
+            self._bring_up(handle)
+            handles.append(handle)
+        # one M:N DistFlow peer group over the whole fleet (§4.6): PD groups
         # migrate KV, NPU-fork broadcasts weights, all on linked clocks
         for i, eng in enumerate(self.engines):
             eng.distflow.link_cluster(
                 [p.distflow for p in self.engines[i + 1:]])
 
-        self._handles = handles           # shared list: RR sees scale-outs
+        if predictor is None and policy == "dist_sched":
+            # PR-4 follow-up: predicted_decode comes from completed-request
+            # traces (EMA per mix), not the sampling budget
+            predictor = TraceEMAPredictor()
+        self._handles = handles           # shared list: RR sees fleet churn
         self.scheduler = DistributedScheduler(
             handles, heatmap, prefill_lens, decode_ratios,
             predictor=predictor,
@@ -147,36 +215,61 @@ class ServingJobEngine:
         self.requests: Dict[str, _PlaneRequest] = {}
         self.jobs: Dict[str, Job] = {}
         self.completions: List[Completion] = []
-        # per-pair queue of prefilled requests waiting on decode-TE capacity
+        # per-group queue of (prefill TE, req_id) waiting on decode capacity
         self._migrate_pending: Dict[str, deque] = {
             h.te_id: deque() for h in handles if h.te_type == "pd_pair"}
 
     # ------------------------------------------------------------ fleet
     def _spawn(self, name: str, mode: str) -> FlowServe:
-        ecfg = replace(self._base_ecfg, mode=mode,
-                       device_offset=self._next_offset())
+        off, owned = self._alloc_window()
+        ecfg = replace(self._base_ecfg, mode=mode, device_offset=off)
         te = FlowServe(self.bundle, self.params, ecfg, name=name)
+        if owned:
+            self._window_of[name] = off
         self.engines.append(te)
         return te
 
-    def _next_offset(self) -> int:
-        """Disjoint per-TE device windows under TP (DESIGN.md §7). With
-        tp=1 every TE shares device 0 (offsets are meaningless); when the
+    def _alloc_window(self) -> Tuple[int, bool]:
+        """Disjoint per-TE device windows (DESIGN.md §7/§9) — width tp, or
+        ONE device per TE at tp=1 so concurrent executors overlap device
+        work instead of queueing on device 0. The free list fed by RELEASED
+        TEs (scale-in) is consulted FIRST: a future fork reuses a drained
+        TE's window before growing the fleet's device footprint. When the
         fleet outgrows the visible devices, later TEs fall back to window 0
-        (simulated co-residence) rather than failing bring-up."""
-        tp = self.topology.tp
-        if tp <= 1:
-            return 0
+        (simulated co-residence, not owned) rather than failing bring-up.
+        Returns (offset, owned)."""
+        width = max(1, self.topology.tp)
+        if self._free_windows:
+            return self._free_windows.pop(), True
         import jax
-        if self._offset_cursor + tp <= jax.device_count():
+        if self._offset_cursor + width <= jax.device_count():
             off = self._offset_cursor
-            self._offset_cursor += tp
-            return off
-        return 0
+            self._offset_cursor += width
+            return off, True
+        return 0, False
+
+    def _bring_up(self, handle: TEHandle) -> None:
+        """PROVISIONING → WARMING → SERVING (the §6 pipeline's TE-side
+        states; bring-up here is synchronous, the transitions are what the
+        rest of the plane keys on)."""
+        self._log_state(handle, handle.transition(TEState.WARMING))
+        self._log_state(handle, handle.transition(TEState.SERVING))
+
+    def _log_state(self, handle: TEHandle, state: TEState) -> None:
+        self.lifecycle_log.append((self.steps, handle.te_id, state.value))
 
     @property
     def handles(self) -> List[TEHandle]:
         return list(self._handles)
+
+    def n_serving(self) -> int:
+        return sum(1 for h in self._handles
+                   if h.state is TEState.SERVING)
+
+    def close(self) -> None:
+        if self._fleet is not None:
+            self._fleet.close()
+            self._fleet = None
 
     # ------------------------------------------------------------ intake
     def submit(self, tokens, sampling: Optional[SamplingParams] = None,
@@ -185,11 +278,10 @@ class ServingJobEngine:
         """request → job → task(s) → TE (Algorithm 1 or round-robin).
 
         Returns the request id; its ``Completion`` surfaces from ``step``
-        once the decode finishes (on the pair's decode TE or the colocated
-        TE). ``predicted_decode`` defaults to the sampling budget; a
-        ``DecodeLengthPredictor`` attached to the scheduler refines it
-        inside ``pd_aware``.
-        """
+        once the decode finishes (on a group decode member or the colocated
+        TE). ``predicted_decode`` defaults to the trace-trained EMA
+        predictor's estimate (``TraceEMAPredictor``; the sampling budget
+        only before any trace exists or under round-robin)."""
         sampling = sampling if sampling is not None else SamplingParams()
         if request is None:
             request = UserRequest(rtype=RequestType.CHAT,
@@ -199,57 +291,102 @@ class ServingJobEngine:
         job = decompose(request)[0]
         job.status = Status.RUNNING
         self.jobs[job.job_id] = job
+        if predicted_decode is None:
+            pred = self.scheduler.predictor
+            if self._rr is None and pred is not None \
+                    and _predictor_trained(pred):
+                predicted_decode = pred.predict_tokens(tokens)
+            else:
+                # no trace yet (or round-robin): the sampling budget is the
+                # only honest estimate — a cold default would misroute
+                # pd_aware and over-reserve load on the chosen TE
+                predicted_decode = sampling.max_new_tokens
         sreq = SchedRequest(tokens=list(tokens),
-                            predicted_decode=sampling.max_new_tokens
-                            if predicted_decode is None else predicted_decode)
+                            predicted_decode=predicted_decode)
         if self._rr is not None:
             handle = self._rr(sreq)
         else:
             handle = self.scheduler.dist_sched(sreq)
             self.scheduler.commit(sreq, handle)
         if handle.te_type == "pd_pair":
+            # Algorithm-1 M:N extension (§4.6): least-loaded prefill member
+            pe = min(handle.prefill_members(), key=_engine_load)
             tp_ = job.spawn(TaskKind.PREFILL, tokens=list(tokens))
-            tp_.te_id, tp_.status = handle.engine.name, Status.RUNNING
+            tp_.te_id, tp_.status = pe.name, Status.RUNNING
             td = job.spawn(TaskKind.DECODE)
-            td.te_id = handle.decode_engine.name
+            td.te_id = None               # decode member picked at handoff
         else:
+            pe = handle.engine
             tc = job.spawn(TaskKind.COLOCATED, tokens=list(tokens))
-            tc.te_id, tc.status = handle.engine.name, Status.RUNNING
+            tc.te_id, tc.status = pe.name, Status.RUNNING
         ereq = Request(prompt_tokens=list(tokens), sampling=sampling,
                        req_id=request.req_id)
         ereq.arrival = request.arrival      # TTFT from EXTERNAL arrival
-        handle.engine.add_request(ereq)
+        pe.add_request(ereq)
         self.requests[request.req_id] = _PlaneRequest(job, sreq, handle, ereq)
         return request.req_id
 
     # ------------------------------------------------------------ drive
     def step(self) -> List[Completion]:
-        """One JE iteration: step every TE, pump each PD pair's handoff
-        (prefill-done → ``migrate_out`` → decode TE, gated on destination
-        page capacity), harvest completions, feed the scale-out trigger."""
+        """One JE iteration: step every live fleet unit — serially, or as
+        submit/collect over the per-TE executors (``fleet_threads > 1``) so
+        units overlap wall-clock work — then run the cross-unit phase on
+        the driver thread: harvest completions, pump drains, feed the
+        scale triggers."""
+        units = [h for h in self._handles
+                 if h.state in (TEState.SERVING, TEState.DRAINING)]
         out: List[Completion] = []
-        for handle in self._handles:
-            pe, de = handle.engine, handle.decode_engine
-            if de is not None:                       # PD pair
-                if pe.has_work():
-                    pe.step()
-                pending = self._migrate_pending[handle.te_id]
-                pending.extend(pe.pop_migratable())
-                while pending and self._try_migrate(pe, de, pending[0]):
-                    pending.popleft()
-                if de.has_work():
-                    out.extend(de.step())
-            elif pe.has_work():                      # colocated
-                out.extend(pe.step())
+        if self.fleet_threads > 1 and len(units) > 1:
+            if self._fleet is None:
+                self._fleet = FleetExecutor(self.fleet_threads)
+            for h in units:
+                self._fleet.submit(h.te_id,
+                                   (lambda hh=h: self._step_unit(hh)))
+            for _, comps in self._fleet.collect(len(units)):
+                out.extend(comps)
+        else:
+            for h in units:
+                out.extend(self._step_unit(h))
         for comp in out:
             self._on_complete(comp)
         self.completions.extend(out)
+        self._pump_drains()
         self._maybe_scale()
         self.steps += 1
         return out
 
+    def _step_unit(self, handle: TEHandle) -> List[Completion]:
+        """One unit's step: group-local work only (executor-safe — a unit's
+        worker never touches another unit's engines). PD groups pump their
+        internal handoff here: prefill members step, finished prefills
+        migrate to the least-loaded decode member (capacity-gated
+        backpressure), decode members step."""
+        out: List[Completion] = []
+        if handle.te_type == "pd_pair":
+            for pe in handle.prefill_members():
+                if pe.has_work():
+                    pe.step()
+            pending = self._migrate_pending[handle.te_id]
+            for pe in handle.prefill_members():
+                pending.extend((pe, rid) for rid in pe.pop_migratable())
+            while pending:
+                pe, rid = pending[0]
+                if not self._try_migrate(pe, handle.pick_decode_member(),
+                                         rid):
+                    break                 # backpressure: retry next step
+                pending.popleft()
+            for de in handle.decode_members():
+                if de.has_work():
+                    out.extend(de.step())
+        else:
+            eng = handle.engine
+            if eng.has_work():
+                out.extend(eng.step())
+        return out
+
     def has_work(self) -> bool:
-        return bool(self.requests)
+        return bool(self.requests) or any(
+            h.state is TEState.DRAINING for h in self._handles)
 
     def run_to_completion(self, max_steps: int = 20000) -> List[Completion]:
         out: List[Completion] = []
@@ -261,10 +398,11 @@ class ServingJobEngine:
 
     # ------------------------------------------------------------ PD pump
     def _try_migrate(self, pe: FlowServe, de: FlowServe, req_id: str) -> bool:
-        """Hand one prefilled request to the pair's decode TE. Returns
-        False when the destination pool lacks pages for the KV run — the
-        request stays queued on the prefill side (backpressure) and the
-        pump retries next step."""
+        """Hand one request's KV from ``pe`` to ``de`` over the §7 sharded
+        path (PD handoff or drain migration). Returns False when the
+        destination pool lacks pages for the KV run — the request stays
+        queued on the source (backpressure) and the pump retries next
+        step."""
         seq = pe._seqs.get(req_id)
         if seq is None:
             return True                   # released upstream; drop
@@ -276,28 +414,21 @@ class ServingJobEngine:
                 return False
         # import_request signals exhaustion (pages or slots) by raising
         # BEFORE committing destination state and before the source
-        # releases — the request parks on the prefill side and retries
+        # releases — the request parks on the source side and retries
         from repro.engine.kv_cache import OutOfPagesError
         try:
             pe.migrate_out(req_id, de)
         except OutOfPagesError:
             return False
-        task = self._find_task(req_id, TaskKind.PREFILL)
-        if task is not None:
-            task.status = Status.DONE
-        decode_task = self._find_task(req_id, TaskKind.DECODE)
-        if decode_task is not None:
-            decode_task.status = Status.RUNNING
-        return True
-
-    def _find_task(self, req_id: str, kind: TaskKind):
         rec = self.requests.get(req_id)
-        if rec is None:
-            return None
-        for task in rec.job.tasks:
-            if task.kind == kind:
-                return task
-        return None
+        for task in (rec.job.tasks if rec is not None else ()):
+            if task.kind == TaskKind.PREFILL:
+                task.status = Status.DONE
+            elif task.kind == TaskKind.DECODE:
+                task.te_id, task.status = de.name, Status.RUNNING
+            elif task.kind == TaskKind.COLOCATED:
+                task.te_id = de.name      # drain migration re-homed it
+        return True
 
     # ------------------------------------------------------------ harvest
     def _on_complete(self, comp: Completion) -> None:
@@ -313,23 +444,153 @@ class ServingJobEngine:
             # complete() drift fix only helps if callers pass actuals
             self.scheduler.complete(rec.sreq, rec.handle,
                                     actual_decode=len(comp.tokens))
+            pred = self.scheduler.predictor
+            if pred is not None and hasattr(pred, "observe"):
+                # train the EMA predictor on the completed trace (§5.3.3)
+                pred.observe(rec.sreq.tokens, len(comp.tokens))
+
+    # ------------------------------------------------------------ scale-in
+    def drain(self, te_id: str) -> TEHandle:
+        """Begin scale-in of one TE (DESIGN.md §9): SERVING → DRAINING.
+        Admissions stop immediately (Algorithm 1 and RR both skip
+        non-admitting handles); each subsequent ``step`` migrates its
+        movable decodes out over the §7 path and lets the rest finish,
+        then releases the TE. Illegal states raise ``LifecycleError``."""
+        handle = next((h for h in self._handles if h.te_id == te_id), None)
+        if handle is None:
+            raise KeyError(f"unknown TE {te_id!r}")
+        self._log_state(handle, handle.transition(TEState.DRAINING))
+        self.scale_events.append({"kind": "drain", "step": self.steps,
+                                  "te_id": te_id, "event": None})
+        return handle
+
+    def _pump_drains(self) -> None:
+        """Driver-thread drain progress: move each draining TE's movable
+        decodes to the least-loaded admitting destination (capacity-gated),
+        release the TE once genuinely empty."""
+        for handle in [h for h in self._handles
+                       if h.state is TEState.DRAINING]:
+            dst = self._drain_destination(exclude=handle)
+            if dst is not None:
+                for eng in self._decode_side(handle):
+                    for rid in eng.migratable_running():
+                        if not self._try_migrate(eng, dst, rid):
+                            break
+            if not any(e.has_work() for e in self._members(handle)) \
+                    and not self._migrate_pending.get(handle.te_id):
+                self._release(handle)
+
+    def _members(self, handle: TEHandle) -> List[FlowServe]:
+        if handle.te_type == "pd_pair":
+            return [*handle.prefill_members(), *handle.decode_members()]
+        return [handle.engine]
+
+    def _decode_side(self, handle: TEHandle) -> List[FlowServe]:
+        return (handle.decode_members() if handle.te_type == "pd_pair"
+                else [handle.engine])
+
+    def _drain_destination(self, exclude: TEHandle) -> Optional[FlowServe]:
+        """Least-loaded admitting decode-capable engine outside ``exclude``."""
+        best, best_load = None, None
+        for h in self._handles:
+            if h is exclude or not h.admitting:
+                continue
+            eng = (h.pick_decode_member() if h.te_type == "pd_pair"
+                   else h.engine)
+            if eng is None:
+                continue
+            load = _engine_load(eng)
+            if best_load is None or load < best_load:
+                best, best_load = eng, load
+        return best
+
+    def _release(self, handle: TEHandle) -> None:
+        """DRAINING → RELEASED: drop the TE from the fleet and return its
+        device window to the free list (the next fork reuses it)."""
+        self._log_state(handle, handle.transition(TEState.RELEASED))
+        for eng in self._members(handle):
+            off = self._window_of.pop(eng.name, None)
+            if off is not None:
+                self._free_windows.append(off)
+            if eng in self.engines:
+                self.engines.remove(eng)
+        self._handles.remove(handle)      # shared list: RR sees the removal
+        self.scheduler.tes.pop(handle.te_id, None)
+        self._migrate_pending.pop(handle.te_id, None)
+        self.scale_events.append({"kind": "release", "step": self.steps,
+                                  "te_id": handle.te_id, "event": None})
+        if self.drain_trigger is not None:
+            self.drain_trigger.rearm()    # the in-flight drain completed
 
     # ------------------------------------------------------------ scaling
     def _maybe_scale(self) -> None:
-        if self.trigger is None:
+        if self.trigger is None and self.drain_trigger is None:
             return
-        loads = [h.refresh() for h in self._handles]
-        if not self.trigger.observe(loads):
+        # mutual exclusion (per TE and per fleet): while ANY TE drains,
+        # neither trigger is fed — a draining TE's load collapsing toward
+        # zero looks exactly like a spread breach, and forking while
+        # shrinking (or vice versa) would thrash. The spread trigger also
+        # must not RE-ARM off the drain's transient profile. (Checked
+        # before refreshing: refresh() locks every engine.)
+        if any(h.state is TEState.DRAINING for h in self._handles):
             return
-        # NPU-fork a new colocated TE from the least-loaded live engine
-        # (its ICI links are the freest; §6.3). FastScaler prices the
-        # 5-step bring-up pipeline around the same fork.
-        src_handle = min(self._handles, key=lambda h: h.load)
-        src_engine = src_handle.decode_engine or src_handle.engine
-        name = f"te-scale{len(self.scale_events)}"
-        ecfg = replace(self._base_ecfg, mode="colocated",
-                       device_offset=self._next_offset())
+        live = [h for h in self._handles if h.state is TEState.SERVING]
+        loads = [h.refresh() for h in live]
+        if self.trigger is not None and self.trigger.observe(loads):
+            self._scale_out()
+            return
+        if self.drain_trigger is not None:
+            if self.trigger is not None and self.trigger.breach_steps > 0:
+                return                    # a fork may be imminent: hold
+            if self.drain_trigger.observe(loads, self.n_serving()):
+                self._start_drain()
+
+    def _start_drain(self) -> None:
+        """Pick the scale-in victim: the least-loaded admitting colocated
+        TE (PD group members are structural — their decode side shrinks
+        only when a grown member empties, future work). A fired trigger
+        with NO drainable candidate re-arms immediately — otherwise a
+        pd-only fleet would disarm it forever on the first idle spell."""
+        cands = [h for h in self._handles
+                 if h.te_type == "colocated" and h.admitting]
+        if len(cands) < 1 or self.n_serving() <= 1:
+            if self.drain_trigger is not None:
+                self.drain_trigger.rearm()
+            return
+        victim = min(cands, key=lambda h: h.load)
+        self.drain(victim.te_id)
+
+    def _scale_out(self) -> None:
+        """Spread breach: NPU-fork capacity from a live engine (§6.3).
+        Decode-dominated pressure with a PD group present grows that
+        group's decode side (M:N, §4.6); anything else forks a whole
+        colocated TE. FastScaler prices the 5-step bring-up pipeline
+        around the same fork."""
+        live = [h for h in self._handles if h.admitting]
+        pd_handles = [h for h in live if h.te_type == "pd_pair"]
+        total_p = sum(h.prefill_load for h in live)
+        total_d = sum(h.decode_load for h in live)
+        grow_group = (pd_handles
+                      and total_d > self.decode_dominance * max(1.0, total_p))
+        if grow_group:
+            group = max(pd_handles, key=lambda h: h.decode_load)
+            src_engine = min(group.decode_members(), key=_engine_load)
+            name = f"{group.te_id}-d{len(group.decode_members())}"
+            mode = "decode"
+        else:
+            group = None
+            src_handle = min(live, key=lambda h: h.load)
+            src_engine = src_handle.decode_engine or src_handle.engine
+            name = f"te-scale{sum(1 for e in self.scale_events if e['kind'] == 'fork')}"
+            mode = "colocated"
+        off, owned = self._alloc_window()
+        ecfg = replace(self._base_ecfg, mode=mode, device_offset=off)
+        # the new TE walks the same lifecycle as the initial fleet
+        handle = (group if group is not None else
+                  TEHandle(name, "colocated", state=TEState.PROVISIONING))
         te = FlowServe.fork_from(src_engine, ecfg, name=name)
+        if owned:
+            self._window_of[name] = off
         for eng in self.engines:
             eng.distflow.link_cluster([te.distflow])
         self.engines.append(te)
@@ -347,11 +608,21 @@ class ServingJobEngine:
                 asset, optimized=True,
                 preloaded=LoadResult("npu_fork_ici", xfer.sim_seconds,
                                      xfer.n_bytes))
-        handle = TEHandle(name, "colocated", engine=te)
+        if group is not None:
+            group.grow_decode(te)
+            self.scale_events.append({"kind": "grow_decode",
+                                      "step": self.steps, "te_id": name,
+                                      "group": group.te_id,
+                                      "source": src_engine.name,
+                                      "event": event})
+            return
+        handle.engine = te
+        self._bring_up(handle)
         self._handles.append(handle)
         self.scheduler.tes[name] = handle
-        self.scale_events.append({"step": self.steps, "te_id": name,
-                                  "source": src_engine.name, "event": event})
+        self.scale_events.append({"kind": "fork", "step": self.steps,
+                                  "te_id": name, "source": src_engine.name,
+                                  "event": event})
 
     # ------------------------------------------------------------ stats
     def fleet_metrics(self) -> Dict[str, Dict[str, float]]:
@@ -361,5 +632,10 @@ class ServingJobEngine:
             handle.refresh()
             out[handle.te_id] = {"load": handle.load,
                                  "n_running": handle.n_running,
-                                 "type": handle.te_type}
+                                 "type": handle.te_type,
+                                 "state": handle.state.value,
+                                 "n_prefill": len(handle.prefill_members())
+                                 if handle.te_type == "pd_pair" else 0,
+                                 "n_decode": len(handle.decode_members())
+                                 if handle.te_type == "pd_pair" else 0}
         return out

@@ -10,7 +10,9 @@ Modes mirror §4.5: "colocated" (chunked-prefill + decode in one engine),
 """
 from __future__ import annotations
 
+import functools
 import itertools
+import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -88,9 +90,23 @@ class EngineConfig:
     seed: int = 0
 
 
+def _executor_safe(fn):
+    """Serialize an engine entry point on the per-engine RLock: the fleet
+    runtime (core/fleet.py) steps TEs from per-unit worker threads while
+    the JE driver thread runs cross-unit actions (drain migration, NPU-fork,
+    load reads) — every public mutation must hold the engine's lock. The
+    RLock keeps internal reentrancy (step → export → release) free."""
+    @functools.wraps(fn)
+    def wrapper(self, *args, **kwargs):
+        with self._lock:
+            return fn(self, *args, **kwargs)
+    return wrapper
+
+
 class FlowServe:
     def __init__(self, bundle: ModelBundle, params, ecfg: EngineConfig,
                  name: str = "te-0"):
+        self._lock = threading.RLock()   # executor-safety (DESIGN.md §9)
         self.bundle = bundle
         self.cfg: ModelConfig = bundle.cfg
         self.ecfg = ecfg
@@ -103,9 +119,18 @@ class FlowServe:
         # SPMD executor mesh: the TE's NPUs form a pure TP group (tp=1 keeps
         # the legacy single-device path; DP happens across TEs via the JE).
         self.mesh = None
+        self.device = None
         if ecfg.tp > 1:
             from repro.launch.mesh import make_engine_mesh
             self.mesh = make_engine_mesh(ecfg.tp, offset=ecfg.device_offset)
+        elif ecfg.device_offset > 0:
+            # tp=1 TEs also honor their device window (DESIGN.md §9): each
+            # fleet member owns ONE device, so concurrent per-TE executors
+            # genuinely overlap device work instead of queueing on device 0
+            self.device = jax.devices()[ecfg.device_offset
+                                        % jax.device_count()]
+            params = jax.device_put(params, self.device)
+            self._key = jax.device_put(self._key, self.device)
 
         if self.runner_kind == "paged":
             kv_sharding = None
@@ -114,6 +139,11 @@ class FlowServe:
                 kv_sharding = engine_kv_pool_sharding(self.cfg, self.mesh)
             self.pool = PagedKVPool(self.cfg, ecfg.n_pages, ecfg.page_size,
                                     ecfg.dtype, sharding=kv_sharding)
+            if self.device is not None:
+                # unpinned jits follow their operands, so homing the pool
+                # (and params/key above) is all the pinning the TE needs
+                self.pool.k = jax.device_put(self.pool.k, self.device)
+                self.pool.v = jax.device_put(self.pool.v, self.device)
             cm = RTCCostModel(flops_per_token=2.0 * self.cfg.active_param_count())
             self.rtc = RelationalTensorCache(self.pool, cm) \
                 if ecfg.enable_prefix_cache else None
@@ -124,6 +154,9 @@ class FlowServe:
             self.rtc = None
             self.runner = SlotRunner(bundle, params, ecfg.n_slots, ecfg.max_len,
                                      ecfg.dtype, mesh=self.mesh)
+            if self.device is not None:
+                self.runner.cache = {k: jax.device_put(v, self.device)
+                                     for k, v in self.runner.cache.items()}
             self._state_cache: Dict[tuple, Any] = {} if ecfg.enable_prefix_cache else None
 
         scfg = SchedulerConfig(max_batch_tokens=ecfg.max_batch_tokens,
@@ -171,16 +204,18 @@ class FlowServe:
         from repro.launch.mesh import make_engine_mesh
         dst_mesh = make_engine_mesh(ecfg.tp, offset=ecfg.device_offset) \
             if ecfg.tp > 1 else None
-        params, lr = npu_fork_live(
-            source.runner.params, source.cfg, dst_mesh,
-            source=source.distflow, link=link,
-            dst_device=jax.devices()[ecfg.device_offset])
-        te = cls(source.bundle, params, ecfg, name=name)
-        source.distflow.link_cluster([te.distflow])
+        with source._lock:   # executor-safe vs a fleet worker stepping src
+            params, lr = npu_fork_live(
+                source.runner.params, source.cfg, dst_mesh,
+                source=source.distflow, link=link,
+                dst_device=jax.devices()[ecfg.device_offset])
+            te = cls(source.bundle, params, ecfg, name=name)
+            source.distflow.link_cluster([te.distflow])
         te.distflow.sim_clock += lr.seconds   # the fork target observed it too
         return te
 
     # ---------------------------------------------------------------- API
+    @_executor_safe
     def add_request(self, req: Request) -> str:
         seq = SequenceState(seq_id=req.req_id, tokens=list(req.prompt_tokens),
                             n_prompt=len(req.prompt_tokens), extra=dict(req.extra))
@@ -198,10 +233,12 @@ class FlowServe:
         self.scheduler.admit(seq)
         return req.req_id
 
+    @_executor_safe
     def has_work(self) -> bool:
         return bool(self._inflight or self._completed_buf) \
             or self.scheduler.has_work()
 
+    @_executor_safe
     def step(self) -> List[Completion]:
         """One engine iteration: (maybe prepared) plan → execute → sample →
         commit → prepare next plan (async mode prepares before sampling).
@@ -503,12 +540,23 @@ class FlowServe:
                                   seq.pages)
 
     # ---------------------------------------------------------------- PD
+    @_executor_safe
     def pop_migratable(self) -> List[str]:
         """P-mode: request ids whose prefill finished and KV is exportable."""
         out = self._prefill_done_buffer
         self._prefill_done_buffer = []
         return out
 
+    @_executor_safe
+    def migratable_running(self) -> List[str]:
+        """Drain support (DESIGN.md §9 scale-in): request ids currently in
+        the decode set whose state can move to another TE right now —
+        fully prefilled and not still waiting on an in-flight KV import
+        (those become migratable after their first decode)."""
+        return [s.seq_id for s in self.scheduler.running
+                if "_kv_pending" not in s.extra]
+
+    @_executor_safe
     def export_kv(self, req_id: str, host_gather: bool = False):
         """P-mode: KV of the first n_prompt-1 tokens; the decode TE runs the
         last prompt token as its first decode step (by-req transfer, §4.5).
@@ -523,6 +571,9 @@ class FlowServe:
         payload["req_id"] = req_id
         payload["sampling"] = self.sample_params[req_id]
         payload["arrival"] = self._requests[req_id].arrival
+        # a mid-decode sequence (drain migration) already produced its first
+        # token here — carry the TTFT so the destination doesn't re-stamp it
+        payload["ttft"] = self._ttft.get(req_id, 0.0)
         return payload
 
     def migrate_out(self, req_id: str, dst: "FlowServe", overlap: bool = True,
@@ -539,7 +590,31 @@ class FlowServe:
         ``host_gather=True`` forces the v1 host round-trip (benchmarks).
         Slot (recurrent-state) payloads use the v1 path: their state is
         O(pages) smaller, so the host hop is not a hot path.
-        """
+
+        Executor-safety: both endpoints' locks are taken up front in
+        canonical (name) order — a drain migrating A→B while the fleet
+        steps B concurrently must not deadlock against a B→A handoff."""
+        first, second = ((self, dst) if self.name <= dst.name
+                         else (dst, self))
+        with first._lock, second._lock:
+            return self._migrate_out_locked(req_id, dst, overlap,
+                                            layer_chunks, host_gather,
+                                            keep_prefix)
+
+    def _migrate_out_locked(self, req_id: str, dst: "FlowServe",
+                            overlap: bool, layer_chunks: int,
+                            host_gather: bool, keep_prefix: bool) -> str:
+        # committing in-flight horizons may FINISH the candidate (late EOS /
+        # max_new_tokens) and release it — a mid-decode drain migration must
+        # treat that as "nothing left to move", not export a ghost
+        self._drain_inflight()
+        if req_id not in self._seqs:
+            return req_id
+        # a mid-decode migration (drain) leaves the scheduler's queues NOW:
+        # release_request below frees pages/slots but doesn't touch queue
+        # membership (finishing seqs already left via on_finished), and a
+        # zombie in `running` would keep this TE's has_work true forever
+        self.scheduler.remove(self._seqs[req_id])
         payload = self.export_kv(req_id, host_gather=host_gather)
         if self.runner_kind != "paged" or host_gather:
             if host_gather and self.runner_kind == "paged":
@@ -569,6 +644,7 @@ class FlowServe:
         self.release_request(req_id, keep_prefix=keep_prefix)
         return req_id
 
+    @_executor_safe
     def finish_pending_imports(self) -> None:
         """D-mode: synchronously drain every deferred KV import (the eager
         complement of the decode-time lazy wait)."""
@@ -577,6 +653,7 @@ class FlowServe:
             if handle is not None:
                 self._import_layerwise(handle, seq)
 
+    @_executor_safe
     def release_request(self, req_id: str, keep_prefix: bool = True) -> None:
         seq = self._seqs.pop(req_id, None)
         self._pending.pop(req_id, None)
@@ -603,12 +680,19 @@ class FlowServe:
             self.runner.free_slot(seq)
         self._requests.pop(req_id, None)
 
+    @_executor_safe
     def import_request(self, payload) -> str:
         """D-mode: accept a migrated (prefilled) request from a prefill TE.
-        The next decode step processes the final prompt token."""
+        The next decode step processes the final prompt token. Drain
+        migrations (DESIGN.md §9) arrive MID-decode: their tokens extend
+        past the prompt and their TTFT already happened on the source TE,
+        so it's seeded here instead of re-stamped at the next commit."""
         req = Request(prompt_tokens=payload["tokens"][:payload["n_prompt"]],
                       sampling=payload["sampling"], req_id=payload["req_id"])
         req.arrival = payload["arrival"]
+        if (payload.get("ttft", 0.0) > 0.0
+                and len(payload["tokens"]) > payload["n_prompt"]):
+            self._ttft[req.req_id] = payload["ttft"]
         seq = SequenceState(seq_id=req.req_id,
                             tokens=list(payload["tokens"]),
                             n_prompt=payload["n_prompt"],
@@ -771,6 +855,7 @@ class FlowServe:
     def prefix_cache_stats(self) -> Dict[str, int]:
         return dict(self.rtc.stats) if self.rtc else {}
 
+    @_executor_safe
     def load_metrics(self) -> Dict[str, float]:
         """Real load signals for the JE's live TEHandle adapter
         (DESIGN.md §9), replacing the hand-maintained floats:

@@ -215,6 +215,26 @@ class Scheduler:
         """Pick the most recently admitted running seq to preempt."""
         return self.running[-1] if self.running else None
 
+    def remove(self, seq: SequenceState) -> None:
+        """Forget a sequence that left this engine WITHOUT finishing here —
+        a mid-decode migration to another TE (drain, DESIGN.md §9). A
+        zombie left in ``running`` would keep ``has_work`` true forever,
+        which blocks a draining TE's release."""
+        if seq in self.running:
+            self.running.remove(seq)
+        if seq in self.prefilling:
+            self.prefilling.remove(seq)
+        try:
+            self.ready.remove(seq)
+        except ValueError:
+            pass
+        try:
+            self.waiting.remove(seq)
+        except ValueError:
+            pass
+        self.prefetching = [(s, t) for s, t in self.prefetching
+                            if s is not seq]
+
     def requeue(self, seq: SequenceState) -> None:
         if seq in self.running:
             self.running.remove(seq)

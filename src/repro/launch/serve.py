@@ -57,12 +57,19 @@ def main() -> None:
     ap.add_argument("--topology", default=None,
                     help="live serving plane (DESIGN.md §9): fleet spec "
                          "'pd=N,colo=N' — N PD-disaggregated 1P+1D pairs "
-                         "plus N PD-colocated TEs (tp/horizon flags apply "
-                         "per TE). Overrides --mode.")
+                         "plus N PD-colocated TEs — or 'pd=NpXd,colo=N' "
+                         "for an M:N group whose N prefill TEs feed X "
+                         "decode TEs (§4.6; tp/horizon flags apply per "
+                         "TE). Overrides --mode.")
     ap.add_argument("--policy", default="dist_sched",
                     choices=["dist_sched", "round_robin"],
                     help="JE placement policy for --topology (Algorithm 1 "
                          "vs the degenerate round-robin baseline)")
+    ap.add_argument("--fleet-threads", type=int, default=0,
+                    help="per-TE executor threads for --topology "
+                         "(core/fleet.py): >1 steps fleet units on pinned "
+                         "worker threads so engines overlap wall-clock "
+                         "work; 0/1 = serial stepping")
     args = ap.parse_args()
     if args.tp > 1:
         print(f"TE mesh: 1x{args.tp} over {jax.device_count()} visible devices")
@@ -75,8 +82,8 @@ def main() -> None:
     prompts = [f"request {i}: explain serverless llm serving" for i in range(args.requests)]
 
     if args.topology:
-        from repro.core.scaling import (DRAMPageCache, FastScaler,
-                                        LoadSpreadTrigger)
+        from repro.core.scaling import (DrainTrigger, DRAMPageCache,
+                                        FastScaler, LoadSpreadTrigger)
         from repro.core.serving_plane import ServingJobEngine, TopologySpec
         topo = TopologySpec.parse(args.topology)
         if args.tp > 1:
@@ -95,7 +102,9 @@ def main() -> None:
                               decode_ratios=hs.decode_ratios,
                               policy=args.policy, ecfg=ecfg,
                               scaler=FastScaler(DRAMPageCache()),
-                              trigger=LoadSpreadTrigger())
+                              trigger=LoadSpreadTrigger(),
+                              drain_trigger=DrainTrigger(),
+                              fleet_threads=args.fleet_threads)
         t0 = time.monotonic()
         for p in prompts:
             je.submit(tok.encode(p), sampling=sp)
@@ -104,13 +113,18 @@ def main() -> None:
         n_tok = sum(len(c.tokens) for c in comps)
         ttft = sum(c.ttft for c in comps) / max(1, len(comps))
         tpot = sum(c.tpot for c in comps) / max(1, len(comps))
-        print(f"serving plane [{args.policy}] topology={args.topology}: "
+        print(f"serving plane [{args.policy}] topology={args.topology} "
+              f"fleet_threads={args.fleet_threads}: "
               f"{len(comps)} completions in {dt:.2f}s ({n_tok/dt:.1f} tok/s) "
               f"ttft={ttft*1e3:.0f}ms tpot={tpot*1e3:.1f}ms")
         print(f"  decisions={je.scheduler.decisions} "
               f"scale_events={len(je.scale_events)}")
         for te_id, m in je.fleet_metrics().items():
-            print(f"  {te_id}: type={m['type']} load={m['load']:.1f}")
+            extra = (f" {m['n_prefill']}P:{m['n_decode']}D"
+                     if m["type"] == "pd_pair" else "")
+            print(f"  {te_id}: type={m['type']} state={m['state']}"
+                  f"{extra} load={m['load']:.1f}")
+        je.close()
         return
 
     if args.mode == "colocated":

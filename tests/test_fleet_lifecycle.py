@@ -1,0 +1,376 @@
+"""Elastic fleet runtime tests (DESIGN.md §9, core/fleet.py).
+
+Fast subset: the lifecycle state machine, the FleetExecutor, the
+DrainTrigger, and the trace-EMA decode-length predictor — all pure
+python. The multi-TE lifecycle tests (drain-under-load parity,
+release-then-refork window reuse, M:N groups, executor parity, the
+fork-while-draining regression) spin several live engines and live in
+the slow lane (markers: ``slow`` + ``fleet``).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fleet import (FleetExecutor, LifecycleError, TEState,
+                              advance)
+from repro.core.predictor import TraceEMAPredictor
+from repro.core.scaling import (DrainTrigger, DRAMPageCache, FastScaler,
+                                LoadSpreadTrigger)
+from repro.core.scheduling import TEHandle
+from repro.core.serving_plane import ServingJobEngine, TopologySpec
+from repro.engine import EngineConfig, FlowServe, Request, SamplingParams
+from repro.models import get_model
+
+SP = SamplingParams(temperature=0.0, max_new_tokens=10, stop_on_eos=False)
+LENS, RATIOS = [16, 64], [0.25, 1.0]
+PD_HEAT = np.ones((2, 2))
+COLO_HEAT = -np.ones((2, 2))
+
+
+def _ecfg(**kw):
+    base = dict(n_pages=64, page_size=8, max_batch_tokens=32,
+                chunk_size=8, max_decode_batch=4)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _plane(bundle, params, topo, heat=COLO_HEAT, **kw):
+    return ServingJobEngine(bundle, params, topo, heatmap=heat,
+                            prefill_lens=LENS, decode_ratios=RATIOS,
+                            ecfg=_ecfg(), **kw)
+
+
+def _prompts(n, length=14, seed0=0):
+    return [[1] + [int(x) for x in
+                   np.random.RandomState(seed0 + i).randint(3, 200, length)]
+            for i in range(n)]
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    bundle = get_model("qwen3-8b", smoke=True)
+    params = bundle.init_params(jax.random.PRNGKey(0), jnp.float32)
+    return bundle, params
+
+
+def _reference_tokens(bundle, params, prompts, sp=SP):
+    ref = FlowServe(bundle, params, _ecfg(), name="lref")
+    ids = [ref.add_request(Request(prompt_tokens=p, sampling=sp))
+           for p in prompts]
+    comps = {c.req_id: c.tokens for c in ref.run_to_completion()}
+    return [comps[i] for i in ids]
+
+
+# ---------------------------------------------------------------------------
+# Fast: lifecycle state machine
+# ---------------------------------------------------------------------------
+
+
+def test_lifecycle_walk_and_illegal_transitions():
+    # the canonical walk is legal end to end
+    s = TEState.PROVISIONING
+    for nxt in (TEState.WARMING, TEState.SERVING, TEState.DRAINING,
+                TEState.SERVING, TEState.DRAINING, TEState.RELEASED):
+        s = advance(s, nxt)
+    assert s is TEState.RELEASED
+    # RELEASED is terminal; skipping states raises
+    for cur, bad in [(TEState.RELEASED, TEState.SERVING),
+                     (TEState.RELEASED, TEState.PROVISIONING),
+                     (TEState.PROVISIONING, TEState.SERVING),
+                     (TEState.WARMING, TEState.DRAINING),
+                     (TEState.SERVING, TEState.RELEASED),
+                     (TEState.SERVING, TEState.WARMING)]:
+        with pytest.raises(LifecycleError):
+            advance(cur, bad)
+
+
+def test_tehandle_transition_and_admitting():
+    h = TEHandle("t", "colocated", state=TEState.PROVISIONING)
+    assert not h.admitting
+    h.transition(TEState.WARMING)
+    h.transition(TEState.SERVING)
+    assert h.admitting
+    h.transition(TEState.DRAINING)
+    assert not h.admitting
+    with pytest.raises(LifecycleError):
+        h.transition(TEState.WARMING)
+    h.transition(TEState.RELEASED)
+    assert h.state is TEState.RELEASED
+
+
+# ---------------------------------------------------------------------------
+# Fast: FleetExecutor
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_executor_submit_collect_and_pinning():
+    ex = FleetExecutor(2)
+    log = {}
+
+    def work(unit, i):
+        # record which thread serves each unit: pinning keeps it stable
+        import threading
+        log.setdefault(unit, set()).add(threading.current_thread().name)
+        return (unit, i)
+
+    for rep in range(3):
+        for unit in ("a", "b", "c"):      # 3 units share 2 workers
+            ex.submit(unit, (lambda u=unit, r=rep: work(u, r)))
+        got = sorted(ex.collect(3))
+        assert got == [("a", ("a", rep)), ("b", ("b", rep)),
+                       ("c", ("c", rep))]
+    assert all(len(threads) == 1 for threads in log.values())
+    ex.close()
+
+
+def test_fleet_executor_propagates_exceptions_after_collecting_all():
+    ex = FleetExecutor(2)
+    done = []
+
+    def boom():
+        raise RuntimeError("unit exploded")
+
+    ex.submit("ok", lambda: done.append(1) or "fine")
+    ex.submit("bad", boom)
+    with pytest.raises(RuntimeError, match="unit exploded"):
+        ex.collect(2)
+    assert done == [1]                    # the healthy unit still ran
+    ex.close()
+
+
+# ---------------------------------------------------------------------------
+# Fast: DrainTrigger + mutual-exclusion semantics
+# ---------------------------------------------------------------------------
+
+
+def test_drain_trigger_semantics():
+    trig = DrainTrigger(low_watermark=2.0, patience=3, min_serving=1)
+    # loaded fleet never drains
+    assert not trig.observe([10.0, 8.0])
+    # sustained low watermark fires exactly at patience
+    assert not trig.observe([0.5, 0.1])
+    assert not trig.observe([0.5, 0.1])
+    assert trig.observe([0.5, 0.1])
+    # one-shot: stays disarmed while the drain is in flight
+    for _ in range(10):
+        assert not trig.observe([0.1, 0.0])
+    # the completed drain re-arms it (release calls rearm)
+    trig.rearm()
+    for _ in range(2):
+        assert not trig.observe([0.1])  # n_serving defaults to len(loads)=1
+    # at min_serving the trigger never fires regardless of load
+    assert trig.fires == 1
+    assert not trig.observe([0.0, 0.0], n_serving=1)
+    # above min_serving it counts down again
+    assert not trig.observe([0.1, 0.0])
+    assert not trig.observe([0.1, 0.0])
+    assert trig.observe([0.1, 0.0])
+    assert trig.fires == 2
+
+
+# ---------------------------------------------------------------------------
+# Fast: trace-EMA decode-length predictor (PR-4 follow-up)
+# ---------------------------------------------------------------------------
+
+
+def test_trace_ema_predictor_converges_per_mix():
+    pred = TraceEMAPredictor(alpha=0.3, default_guess=64)
+    rng = np.random.RandomState(0)
+    short = [list(rng.randint(3, 200, 8)) for _ in range(40)]
+    long = [list(rng.randint(3, 200, 300)) for _ in range(40)]
+    # before any trace: the default guess
+    assert pred.predict_tokens(short[0]) == 64
+    for s, l in zip(short, long):
+        # shortP/longD vs longP/shortD — the serving mixes' signature
+        pred.observe(s, 24 + int(rng.randn() * 2))
+        pred.observe(l, 6 + int(rng.randn() * 1))
+    # the two mixes separate (per-bin EMA) and the estimates converge
+    assert abs(pred.predict_tokens(short[0]) - 24) <= 3
+    assert abs(pred.predict_tokens(long[0]) - 6) <= 2
+    assert pred.n_observations() == 80
+    # an untrained mix falls back to the nearest trained one, not default
+    assert pred.predict_tokens(list(rng.randint(3, 200, 16))) \
+        == pred.predict_tokens(short[0])
+
+
+def test_trace_ema_predictor_converges_load_estimates():
+    """The plane-level effect: committed load (prompt + predicted_decode)
+    converges to the actually-consumed tokens as traces accumulate."""
+    pred = TraceEMAPredictor(alpha=0.3, default_guess=128)
+    rng = np.random.RandomState(1)
+    actual_decode = 20
+    drift = []
+    for _ in range(50):
+        prompt = list(rng.randint(3, 200, 12))
+        predicted = pred.predict_tokens(prompt)
+        drift.append(abs(predicted - actual_decode))
+        pred.observe(prompt, actual_decode)
+    assert drift[0] == abs(128 - actual_decode)    # cold start: way off
+    assert max(drift[-10:]) <= 1                   # converged estimates
+
+
+def test_topology_parse_mn_groups():
+    t = TopologySpec.parse("pd=1p2d,colo=1")
+    assert t.groups() == [(1, 2)] and t.colo == 1 and t.n_engines() == 4
+    t2 = TopologySpec.parse("pd=2p3d,colo=0")
+    assert t2.groups() == [(2, 3)] and t2.n_engines() == 5
+    # pd=N keeps meaning N 1P:1D pairs
+    assert TopologySpec.parse("pd=2,colo=1").groups() == [(1, 1), (1, 1)]
+    with pytest.raises(ValueError):
+        TopologySpec.parse("pd=0p2d")
+
+
+# ---------------------------------------------------------------------------
+# Multi-TE lifecycle (slow + fleet): drain parity, window reuse, M:N,
+# executor parity, fork-while-draining regression
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.fleet
+def test_drain_under_load_parity(qwen):
+    """Every in-flight request on a draining TE completes or migrates out
+    (§7 sharded path) with greedy token parity, then the TE releases."""
+    bundle, params = qwen
+    sp = SamplingParams(temperature=0.0, max_new_tokens=24,
+                        stop_on_eos=False)
+    prompts = _prompts(4)
+    je = _plane(bundle, params, TopologySpec(pd=0, colo=2),
+                policy="round_robin")
+    rids = [je.submit(p, sampling=sp) for p in prompts]
+    for _ in range(2):
+        je.step()
+    victim = je.handles[1]
+    assert victim.engine.migratable_running(), \
+        "drain must start with decodes in flight"
+    je.drain(victim.te_id)
+    assert not victim.admitting
+    je.run_to_completion()
+    comps = {c.req_id: c.tokens for c in je.completions}
+    assert len(comps) == 4
+    ref = _reference_tokens(bundle, params, prompts, sp)
+    assert [comps[r] for r in rids] == ref
+    # mid-decode KV really crossed DistFlow (not just local completion)
+    assert victim.engine.distflow.bytes_moved() > 0
+    # the victim fully drained and RELEASED; the survivor served its seqs
+    assert victim.state is TEState.RELEASED
+    assert [h.te_id for h in je.handles] == ["te-colo0"]
+    assert je.handles[0].engine.decode_steps > 0
+    kinds = [e["kind"] for e in je.scale_events]
+    assert kinds == ["drain", "release"]
+
+
+@pytest.mark.slow
+@pytest.mark.fleet
+def test_release_then_refork_reuses_device_window(qwen):
+    """Scale-in frees the TE's device window; the next fork takes it from
+    the free list instead of growing the fleet's device footprint."""
+    bundle, params = qwen
+    je = _plane(bundle, params, TopologySpec(pd=0, colo=2),
+                policy="round_robin",
+                scaler=FastScaler(DRAMPageCache()))
+    assert je._window_of == {"te-colo0": 0, "te-colo1": 1}
+    je.submit(_prompts(1)[0], sampling=SP)
+    je.run_to_completion()
+    je.drain("te-colo1")
+    je.run_to_completion()
+    assert je._free_windows == [1]
+    je._scale_out()                       # refork (trigger-independent)
+    forked = je.engines[-1]
+    assert forked.name == "te-scale0"
+    assert forked.ecfg.device_offset == 1          # the freed window
+    assert je._window_of == {"te-colo0": 0, "te-scale0": 1}
+    assert je._free_windows == []
+    # the reforked TE walked the lifecycle and serves traffic
+    assert je.scheduler.tes["te-scale0"].state is TEState.SERVING
+    rid = je.submit(_prompts(1, seed0=7)[0], sampling=SP,
+                    predicted_decode=8)
+    comps = {c.req_id: c.tokens for c in je.run_to_completion()}
+    assert rid in comps
+
+
+@pytest.mark.slow
+@pytest.mark.fleet
+def test_mn_group_spreads_handoffs_with_parity(qwen):
+    """A pd=1p2d group: one prefill TE feeds BOTH decode members (least-
+    loaded pick per handoff) and tokens match the single-TE reference."""
+    bundle, params = qwen
+    prompts = _prompts(4)
+    je = _plane(bundle, params, TopologySpec.parse("pd=1p2d,colo=0"),
+                heat=PD_HEAT)
+    rids = [je.submit(p, sampling=SP) for p in prompts]
+    comps = {c.req_id: c.tokens for c in je.run_to_completion()}
+    assert len(comps) == 4
+    assert [comps[r] for r in rids] == _reference_tokens(bundle, params,
+                                                         prompts)
+    group = je.handles[0]
+    des = group.decode_members()
+    assert len(des) == 2
+    # both decode members actually decoded (handoffs spread by load)
+    assert all(d.decode_steps > 0 for d in des)
+    assert group.engine.decode_steps == 0          # prefill member didn't
+
+
+@pytest.mark.slow
+@pytest.mark.fleet
+def test_fleet_threads_token_parity_and_equal_decisions(qwen):
+    """The executor layer may change wall-clock only: the same batch
+    through serial and threaded planes yields identical placement
+    decisions and identical greedy tokens."""
+    bundle, params = qwen
+    prompts = _prompts(6)
+    runs = {}
+    for label, ft in (("serial", 0), ("threads", 2)):
+        je = _plane(bundle, params, TopologySpec(pd=1, colo=1),
+                    heat=PD_HEAT, fleet_threads=ft)
+        rids = [je.submit(p, sampling=SP) for p in prompts]
+        comps = {c.req_id: c.tokens for c in je.run_to_completion()}
+        runs[label] = ([comps[r] for r in rids],
+                       dict(je.scheduler.decisions))
+        je.close()
+    assert runs["serial"][0] == runs["threads"][0]
+    assert runs["serial"][1] == runs["threads"][1]
+    assert runs["serial"][0] == _reference_tokens(bundle, params, prompts)
+
+
+@pytest.mark.slow
+@pytest.mark.fleet
+def test_no_fork_while_draining_regression(qwen):
+    """LoadSpreadTrigger and the drain path are mutually exclusive per TE:
+    a spread breach during an active drain (the draining TE's load
+    collapsing looks exactly like skew) must NOT fork, and the trigger
+    must not even advance its breach counter until the drain completes."""
+    bundle, params = qwen
+    trig = LoadSpreadTrigger(threshold=0.2, patience=1, min_load=0.5,
+                             max_fires=5)
+    je = _plane(bundle, params, TopologySpec(pd=0, colo=2),
+                policy="round_robin", scaler=FastScaler(DRAMPageCache()),
+                trigger=trig)
+    sp = SamplingParams(temperature=0.0, max_new_tokens=24,
+                        stop_on_eos=False)
+    # IDENTICAL prompts round-robined: both TEs carry the same load, so the
+    # patience=1 hair trigger cannot fire before the drain begins
+    prompt = _prompts(1)[0]
+    rids = [je.submit(list(prompt), sampling=sp) for _ in range(4)]
+    je.step()
+    je.drain("te-colo1")
+    b0 = trig.breach_steps
+    # draining migrates the victim's seqs onto the survivor: the spread
+    # (loaded survivor vs emptying victim) now BREACHES every step — the
+    # mutual exclusion must keep the trigger unfed until RELEASED
+    for _ in range(300):
+        if not any(h.state is TEState.DRAINING for h in je.handles):
+            break
+        je.step()
+        assert not any(e["kind"] == "fork" for e in je.scale_events), \
+            "forked while a TE was draining"
+        assert trig.breach_steps == b0, "trigger fed during a drain"
+    assert not any(h.state is TEState.DRAINING for h in je.handles), \
+        "drain failed to release within 300 steps"
+    je.run_to_completion()
+    assert {c.req_id for c in je.completions} == set(rids)
+    # after the drain completes the trigger is live again (not wedged)
+    assert trig.armed and trig.fires == 0

@@ -5,7 +5,7 @@
 PYTEST   := PYTHONPATH=src python -m pytest
 XLA_HOST := XLA_FLAGS="--xla_force_host_platform_device_count=8"
 
-.PHONY: tier1 fast test-fleet bench-tp bench-pd bench-hotloop bench-serving bench help
+.PHONY: tier1 fast test-fleet bench-tp bench-pd bench-hotloop bench-serving bench-scaleout bench help
 
 tier1:  ## full tier-1 suite (ROADMAP.md verify command) on 8 simulated devices
 	$(XLA_HOST) $(PYTEST) -x -q
@@ -27,6 +27,9 @@ FLEET_THREADS ?= 4
 bench-serving:  ## live serving plane: Algorithm 1 vs RR + fleet-threads axis + scale-in (FLEET_THREADS=N)
 	$(XLA_HOST) PYTHONPATH=src python benchmarks/bench_serving_plane.py \
 		--fleet-threads $(FLEET_THREADS)
+
+bench-scaleout:  ## cold-start ladder + fork-tree 1->N scale-out (--json -> BENCH_scale_out.json)
+	$(XLA_HOST) PYTHONPATH=src python -m benchmarks.run --only scale_out --json
 
 test-fleet:  ## just the multi-TE elastic-fleet lifecycle suite (slow lane)
 	$(XLA_HOST) $(PYTEST) -x -q -m fleet

@@ -30,6 +30,7 @@ MODULES = [
     ("pd_migration", "benchmarks.bench_pd_migration"),
     ("decode_hotloop", "benchmarks.bench_decode_hotloop"),
     ("serving_plane", "benchmarks.bench_serving_plane"),
+    ("scale_out", "benchmarks.bench_scale_out"),
 ]
 
 

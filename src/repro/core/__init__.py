@@ -3,7 +3,9 @@ from repro.core.abstractions import (UserRequest, RequestType, Job, JobKind,  # 
 from repro.core.scheduling import (DistributedScheduler, TEHandle, SchedRequest,  # noqa: F401
                                    GlobalPromptTree, round_robin_scheduler)
 from repro.core.cluster import ClusterManager, JobExecutor, TaskExecutor, AutoscalerConfig  # noqa: F401
-from repro.core.scaling import FastScaler, DRAMPageCache, ModelAsset, ModelLoader, ScaleTimings  # noqa: F401
+from repro.core.scaling import (FastScaler, DRAMPageCache, ModelAsset, ModelLoader,  # noqa: F401
+                                ScaleTimings, WarmPool, LoadSpreadTrigger, DrainTrigger,
+                                tier_seconds)
 from repro.core.heatmap import HeatmapStudy  # noqa: F401
 from repro.core.predictor import (PredictorConfig, DecodeLengthPredictor,  # noqa: F401
                                   train_predictor, synth_trace)

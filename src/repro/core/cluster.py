@@ -208,10 +208,21 @@ class ClusterManager:
 
     def reap_drained(self) -> List[str]:
         """Release every DRAINING TE that has emptied: transition to
-        RELEASED, return its pre-warm resources, drop it from membership."""
+        RELEASED, return its pre-warm resources, drop it from membership.
+        With a warm pool on the scaler (DESIGN.md §10), a live engine's
+        device-resident params drain back to host DRAM on the way out, so
+        the next scale-up takes the warm path instead of reloading."""
         released = []
+        warm = getattr(self.scaler, "warm", None)
         for te_id in [t for t, te in self.tes.items() if te.drained()]:
-            self.tes[te_id].transition(TEState.RELEASED)
+            te = self.tes[te_id]
+            te.transition(TEState.RELEASED)
+            if warm is not None and te.engine is not None \
+                    and hasattr(te.engine, "release_params"):
+                host = te.engine.release_params(
+                    to_host=not warm.hit(self.asset.name))
+                if host is not None:
+                    warm.put(self.asset.name, host, host_copy=False)
             self.scaler.release(te_id)
             del self.tes[te_id]
             released.append(te_id)

@@ -9,9 +9,13 @@ benchmarks measure the same code the autoscaler runs.
 """
 from __future__ import annotations
 
+import math
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
+
+import numpy as np
 
 from repro.engine.distflow import (BACKENDS, BufferInfo, DistFlow,
                                    _fanout_penalty, _nbytes)
@@ -51,6 +55,77 @@ class PreWarmedTE:
     te_id: str
     bound_model: Optional[str] = None
     busy: bool = False
+
+
+class WarmPool:
+    """DRAM-warm tier of the cold-start ladder (DESIGN.md §10): host-pinned
+    copies of REAL param pytrees, one entry per model asset.
+
+    A hit turns TE bring-up into ``jax.device_put`` onto the TE's device
+    window plus jit warmup — no model re-init and no deserialization (the
+    ``DRAMPageCache`` below models the safetensors FILE cache, which still
+    pays tensor-init on load; this pool holds ready tensors). The pool is
+    fed two ways: predictive ``put`` by the cluster manager, and RELEASED
+    TEs draining their device-resident params back to host instead of
+    dropping the bytes. One entry serves ANY number of concurrent
+    bring-ups — ``device_put`` only reads it, nothing consumes it."""
+
+    def __init__(self, capacity_bytes: float = 64e9):
+        self.capacity = capacity_bytes
+        self.entries: "OrderedDict[str, Any]" = OrderedDict()
+        self.sizes: Dict[str, int] = {}
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.bytes_evicted = 0
+
+    def used(self) -> int:
+        return sum(self.sizes.values())
+
+    def put(self, name: str, params, host_copy: bool = True) -> bool:
+        """Pin one asset's params in host DRAM, LRU-evicting until it fits.
+        ``params`` may be device-resident — ``host_copy=True`` materializes
+        numpy leaves (callers that already hold a host copy, e.g. a
+        released TE's drained params, pass False). Returns False when the
+        asset alone exceeds capacity (dropped, not partially resident)."""
+        if name in self.entries:
+            self.entries.move_to_end(name)
+            return True
+        n = _nbytes(params)
+        if n > self.capacity:
+            return False
+        while self.used() + n > self.capacity and self.entries:
+            victim, _ = self.entries.popitem(last=False)
+            self.evictions += 1
+            self.bytes_evicted += self.sizes.pop(victim)
+        if host_copy:
+            import jax
+            params = jax.tree.map(lambda a: np.asarray(a), params)
+        self.entries[name] = params
+        self.sizes[name] = n
+        return True
+
+    def get(self, name: str):
+        """The host-pinned params for ``name`` (hit, refreshes LRU order)
+        or None (miss). Hit/miss counters are the accounting the scale-out
+        path reports per bring-up tier."""
+        params = self.entries.get(name)
+        if params is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self.entries.move_to_end(name)
+        return params
+
+    def hit(self, name: str) -> bool:
+        """Non-counting peek (capacity planning / tier pricing)."""
+        return name in self.entries
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "bytes_evicted": self.bytes_evicted,
+                "resident": len(self.entries), "used_bytes": self.used()}
 
 
 class DRAMPageCache:
@@ -130,16 +205,41 @@ def npu_fork_live(params, cfg, dst_mesh, source: Optional[DistFlow] = None,
     return forked, LoadResult(f"npu_fork_{link}", secs, n, params=forked)
 
 
+def tier_seconds(asset: ModelAsset, tier: str,
+                 timings: ScaleTimings = ScaleTimings()) -> float:
+    """Modeled TE-Load wall for one bring-up of ``asset`` through a
+    cold-start-ladder tier (DESIGN.md §10): ``fork`` = per-shard NPU-fork
+    over ICI, ``warm`` = WarmPool hit → PCIe ``device_put`` (no tensor
+    init), anything else = cold (tensor init + SSD read). This is the
+    full-size pricing ``scale_to(pace=asset)`` holds each bring-up job to
+    while the CPU sim moves smoke-scale bytes — same modeled-cost idiom as
+    ``ModelLoader``, kept in closed form so concurrent rounds can overlap
+    the waits without touching the DistFlow clock."""
+    per_te = asset.n_bytes / max(1, asset.tp)
+    if tier == "fork":
+        return per_te / BACKENDS["ici"]["bw"]
+    if tier == "warm":
+        return per_te / BACKENDS["pcie_dram"]["bw"]
+    return timings.torch_init + per_te / BACKENDS["ssd"]["bw"]
+
+
 class ModelLoader:
     """TE-Load step (§6.2): local loading via PCIe (DRAM hit/miss) or
     NPU-fork over chip-to-chip links from a running TE."""
 
-    def __init__(self, dram: DRAMPageCache, timings: ScaleTimings = ScaleTimings()):
+    def __init__(self, dram: DRAMPageCache, timings: ScaleTimings = ScaleTimings(),
+                 warm: Optional[WarmPool] = None):
         self.dram = dram
         self.t = timings
+        self.warm = warm
 
     def local_load(self, asset: ModelAsset, n_parallel_tes: int = 1) -> LoadResult:
         per_te = asset.n_bytes / asset.tp
+        if self.warm is not None and self.warm.hit(asset.name):
+            # DRAM-warm tier (DESIGN.md §10): ready tensors, no torch init —
+            # bring-up is pure PCIe device_put bandwidth
+            bw = BACKENDS["pcie_dram"]["bw"] / max(1, n_parallel_tes)
+            return LoadResult("warm_pool", per_te / bw, int(per_te))
         if self.dram.hit(asset.name):
             bw = BACKENDS["pcie_dram"]["bw"] / max(1, n_parallel_tes)  # PCIe contention
             return LoadResult("dram_hit", self.t.torch_init + per_te / bw, int(per_te))
@@ -189,35 +289,50 @@ class LoadSpreadTrigger:
     breach: the trigger disarms until the spread next drops below the
     threshold — a freshly forked TE joins with zero load, which KEEPS the
     spread high, so re-arming on recovery (not on time) is what prevents a
-    fork storm — and ``max_fires`` caps total fires for bounded fleets."""
+    fork storm — and ``max_fires`` caps total fires for bounded fleets.
+
+    ``observe`` reports a capacity DEFICIT (how many TEs short the fleet
+    is), not a boolean: with ``te_capacity`` set, a burst that needs four
+    more TEs requests the whole fork tree in ONE fire instead of one fork
+    per re-arm cycle. 0 = don't scale; truthiness is backward-compatible
+    with the old bool contract."""
 
     threshold: float = 0.5              # (max-min)/max relative spread
     patience: int = 8                   # consecutive breached observations
     min_load: float = 1.0               # ignore spread across near-idle TEs
     max_fires: int = 1
+    te_capacity: Optional[float] = None  # tokens of work one TE absorbs
     breach_steps: int = 0
     armed: bool = True
     fires: int = 0
+    last_deficit: int = 0
 
-    def observe(self, loads: List[float]) -> bool:
-        """Feed one observation of the fleet's live loads; True ⇒ scale out
-        now (the caller forks a TE via ``FastScaler`` / NPU-fork)."""
+    def observe(self, loads: List[float]) -> int:
+        """Feed one observation of the fleet's live loads; returns the TE
+        deficit — 0 ⇒ hold, k ≥ 1 ⇒ scale out by k (the caller forks via
+        ``FastScaler`` / NPU-fork; k > 1 plans a fork tree)."""
         peak = max(loads) if loads else 0.0
         spread = 0.0 if peak < self.min_load \
             else (peak - min(loads)) / peak
         if spread <= self.threshold:
             self.breach_steps = 0
             self.armed = True
-            return False
+            return 0
         if not self.armed or self.fires >= self.max_fires:
-            return False
+            return 0
         self.breach_steps += 1
         if self.breach_steps < self.patience:
-            return False
+            return 0
         self.armed = False
         self.breach_steps = 0
         self.fires += 1
-        return True
+        if self.te_capacity is None:
+            deficit = 1
+        else:
+            want = math.ceil(sum(loads) / max(1e-9, self.te_capacity))
+            deficit = max(1, want - len(loads))
+        self.last_deficit = deficit
+        return deficit
 
 
 @dataclass
@@ -242,6 +357,7 @@ class DrainTrigger:
     patience: int = 8                   # consecutive low observations
     min_serving: int = 1                # never drain below this many TEs
     max_fires: int = 64
+    resurge_factor: float = 4.0         # resurgence = mean > factor*watermark
     breach_steps: int = 0
     armed: bool = True
     fires: int = 0
@@ -273,6 +389,17 @@ class DrainTrigger:
         """Report the in-flight drain finished (TE reached RELEASED)."""
         self.armed = True
 
+    def resurgent(self, loads: List[float]) -> bool:
+        """Load-resurgence check for drain-CANCEL (DESIGN.md §10): True
+        when the mean load across the still-serving TEs has shot past
+        ``resurge_factor`` × the low watermark — the capacity being
+        drained is needed after all, so the plane legally transitions
+        the DRAINING TE back to SERVING instead of releasing it."""
+        if not loads:
+            return False
+        return (sum(loads) / len(loads)
+                > self.resurge_factor * self.low_watermark)
+
 
 @dataclass
 class ScaleEvent:
@@ -288,10 +415,12 @@ class FastScaler:
     toggleable so Figure 9's before/after is reproducible."""
 
     def __init__(self, dram: DRAMPageCache, timings: ScaleTimings = ScaleTimings(),
-                 n_prewarm_pods: int = 4, n_prewarm_tes: int = 4):
+                 n_prewarm_pods: int = 4, n_prewarm_tes: int = 4,
+                 warm: Optional[WarmPool] = None):
         self.t = timings
         self.dram = dram
-        self.loader = ModelLoader(dram, timings)
+        self.warm = warm
+        self.loader = ModelLoader(dram, timings, warm=warm)
         self.pods = [PreWarmedPod(f"pod-{i}") for i in range(n_prewarm_pods)]
         self.tes = [PreWarmedTE(f"pw-te-{i}") for i in range(n_prewarm_tes)]
         self.events: List[ScaleEvent] = []

@@ -48,7 +48,10 @@ back on the free list.
 from __future__ import annotations
 
 import re
+import threading
 import time
+
+import jax
 from collections import deque
 from dataclasses import dataclass, field, replace
 from typing import Any, Dict, List, Optional, Tuple
@@ -58,7 +61,7 @@ from repro.core.abstractions import (Job, RequestType, Status, TaskKind,
 from repro.core.fleet import FleetExecutor, TEState
 from repro.core.predictor import TraceEMAPredictor
 from repro.core.scaling import (DrainTrigger, FastScaler, LoadSpreadTrigger,
-                                ModelAsset)
+                                ModelAsset, WarmPool, tier_seconds)
 from repro.core.scheduling import (DistSchedConfig, DistributedScheduler,
                                    SchedRequest, TEHandle, _engine_load,
                                    _predictor_trained,
@@ -140,6 +143,7 @@ class ServingJobEngine:
                  scaler: Optional[FastScaler] = None,
                  trigger: Optional[LoadSpreadTrigger] = None,
                  drain_trigger: Optional[DrainTrigger] = None,
+                 warm_pool: Optional[WarmPool] = None,
                  fleet_threads: int = 0):
         if policy not in ("dist_sched", "round_robin"):
             raise ValueError(f"unknown policy {policy!r}")
@@ -161,16 +165,26 @@ class ServingJobEngine:
         self._offset_cursor = 0
         self._free_windows: List[int] = []      # released device windows
         self._window_of: Dict[str, int] = {}    # engine name -> owned window
+        # window bookkeeping is driver-thread state, but concurrent fork
+        # rounds (scale_to) allocate windows for in-flight bring-ups: the
+        # lock + reserved set guarantee two forks are never handed the same
+        # freed window before either registers
+        self._window_lock = threading.Lock()
+        self._reserved_windows: set = set()
         self.engines: List[FlowServe] = []
         self.policy = policy
         self.scaler = scaler
         self.trigger = trigger
         self.drain_trigger = drain_trigger
+        self.warm_pool = warm_pool
         self.scale_events: List[Dict[str, Any]] = []
+        self.resubmits: List[Dict[str, Any]] = []   # mid-prefill restarts
         self.lifecycle_log: List[Tuple[int, str, str]] = []
         self.steps = 0
         self.fleet_threads = fleet_threads
         self._fleet: Optional[FleetExecutor] = None
+        self._fork_pool: Optional[FleetExecutor] = None  # scale_to rounds
+        self._scale_seq = 0                     # te-scaleN naming
 
         handles: List[TEHandle] = []
         for gi, (n_p, n_d) in enumerate(topology.groups()):
@@ -224,8 +238,7 @@ class ServingJobEngine:
         off, owned = self._alloc_window()
         ecfg = replace(self._base_ecfg, mode=mode, device_offset=off)
         te = FlowServe(self.bundle, self.params, ecfg, name=name)
-        if owned:
-            self._window_of[name] = off
+        self._commit_window(name, off, owned)
         self.engines.append(te)
         return te
 
@@ -237,16 +250,36 @@ class ServingJobEngine:
         TE's window before growing the fleet's device footprint. When the
         fleet outgrows the visible devices, later TEs fall back to window 0
         (simulated co-residence, not owned) rather than failing bring-up.
-        Returns (offset, owned)."""
+        Returns (offset, owned).
+
+        An allocated window is RESERVED until ``_commit_window`` registers
+        the TE that uses it: concurrent fork rounds allocate several
+        windows before any of their bring-ups finish, and a release landing
+        mid-round must not re-hand an offset that an in-flight fork already
+        holds."""
         width = max(1, self.topology.tp)
-        if self._free_windows:
-            return self._free_windows.pop(), True
-        import jax
-        if self._offset_cursor + width <= jax.device_count():
-            off = self._offset_cursor
-            self._offset_cursor += width
-            return off, True
-        return 0, False
+        with self._window_lock:
+            while self._free_windows:
+                off = self._free_windows.pop()
+                if off in self._reserved_windows:
+                    continue
+                self._reserved_windows.add(off)
+                return off, True
+            import jax
+            if self._offset_cursor + width <= jax.device_count():
+                off = self._offset_cursor
+                self._offset_cursor += width
+                self._reserved_windows.add(off)
+                return off, True
+            return 0, False
+
+    def _commit_window(self, name: str, off: int, owned: bool) -> None:
+        """Bind an allocated window to its now-registered TE (clears the
+        in-flight reservation)."""
+        with self._window_lock:
+            self._reserved_windows.discard(off)
+            if owned:
+                self._window_of[name] = off
 
     def _bring_up(self, handle: TEHandle) -> None:
         """PROVISIONING → WARMING → SERVING (the §6 pipeline's TE-side
@@ -270,6 +303,9 @@ class ServingJobEngine:
         if self._fleet is not None:
             self._fleet.close()
             self._fleet = None
+        if self._fork_pool is not None:
+            self._fork_pool.close()
+            self._fork_pool = None
 
     # ------------------------------------------------------------ intake
     def submit(self, tokens, sampling: Optional[SamplingParams] = None,
@@ -464,14 +500,50 @@ class ServingJobEngine:
                                   "te_id": te_id, "event": None})
         return handle
 
+    def cancel_drain(self, te_id: str) -> TEHandle:
+        """Drain-CANCEL (DESIGN.md §10): DRAINING → SERVING on a load
+        resurgence — the capacity being drained is needed after all, so
+        admissions resume instead of releasing the window. The state
+        machine already permits the transition; this is what drives it."""
+        handle = next((h for h in self._handles if h.te_id == te_id), None)
+        if handle is None:
+            raise KeyError(f"unknown TE {te_id!r}")
+        self._log_state(handle, handle.transition(TEState.SERVING))
+        self.scale_events.append({"kind": "drain_cancel", "step": self.steps,
+                                  "te_id": te_id, "event": None})
+        if self.drain_trigger is not None:
+            self.drain_trigger.rearm()    # the in-flight drain is over
+        return handle
+
     def _pump_drains(self) -> None:
-        """Driver-thread drain progress: move each draining TE's movable
-        decodes to the least-loaded admitting destination (capacity-gated),
-        release the TE once genuinely empty."""
-        for handle in [h for h in self._handles
-                       if h.state is TEState.DRAINING]:
+        """Driver-thread drain progress. First the resurgence check: if the
+        still-serving TEs' mean load shot past the drain trigger's
+        resurgence watermark, every in-flight drain is CANCELLED
+        (DRAINING → SERVING) instead of pumped. Otherwise each draining
+        TE's mid-PREFILL work is re-submitted to a prefill-capable
+        destination (token-level restart — finishing prefill on a TE
+        that's leaving just delays the release), its movable decodes
+        migrate to the least-loaded admitting destination
+        (capacity-gated), and the TE is released once genuinely empty."""
+        draining = [h for h in self._handles if h.state is TEState.DRAINING]
+        if not draining:
+            return
+        if self.drain_trigger is not None:
+            serving = [h for h in self._handles
+                       if h.state is TEState.SERVING]
+            if serving and self.drain_trigger.resurgent(
+                    [h.refresh() for h in serving]):
+                for handle in draining:
+                    self.cancel_drain(handle.te_id)
+                return
+        for handle in draining:
             dst = self._drain_destination(exclude=handle)
             if dst is not None:
+                resub_dst = self._resubmit_destination(exclude=handle)
+                if resub_dst is not None:
+                    for eng in self._members(handle):
+                        for req in eng.cancel_queued():
+                            self._resubmit(req, resub_dst, src=eng.name)
                 for eng in self._decode_side(handle):
                     for rid in eng.migratable_running():
                         if not self._try_migrate(eng, dst, rid):
@@ -479,6 +551,39 @@ class ServingJobEngine:
             if not any(e.has_work() for e in self._members(handle)) \
                     and not self._migrate_pending.get(handle.te_id):
                 self._release(handle)
+
+    def _resubmit_destination(self, exclude: TEHandle) -> Optional[FlowServe]:
+        """Least-loaded admitting PREFILL-capable engine outside
+        ``exclude`` (a decode-mode member can't restart a prompt)."""
+        best, best_load = None, None
+        for h in self._handles:
+            if h is exclude or not h.admitting:
+                continue
+            if h.te_type == "pd_pair":
+                eng = min(h.prefill_members(), key=_engine_load)
+            else:
+                eng = h.engine
+            if eng is None:
+                continue
+            load = _engine_load(eng)
+            if best_load is None or load < best_load:
+                best, best_load = eng, load
+        return best
+
+    def _resubmit(self, req: Request, dst: FlowServe, src: str) -> None:
+        """Token-level restart of a mid-PREFILL request on ``dst``: the
+        original ``Request`` (req_id + external arrival preserved, so TTFT
+        spans the restart) re-enters the destination's scheduler from the
+        prompt. Recorded in ``resubmits``, NOT ``scale_events`` — it's
+        request routing, not fleet shape."""
+        dst.add_request(req)
+        rec = self.requests.get(req.req_id)
+        if rec is not None:
+            for task in rec.job.tasks:
+                if task.kind in (TaskKind.PREFILL, TaskKind.COLOCATED):
+                    task.te_id, task.status = dst.name, Status.RUNNING
+        self.resubmits.append({"req_id": req.req_id, "from": src,
+                               "to": dst.name, "step": self.steps})
 
     def _members(self, handle: TEHandle) -> List[FlowServe]:
         if handle.te_type == "pd_pair":
@@ -506,12 +611,23 @@ class ServingJobEngine:
 
     def _release(self, handle: TEHandle) -> None:
         """DRAINING → RELEASED: drop the TE from the fleet and return its
-        device window to the free list (the next fork reuses it)."""
+        device window to the free list (the next fork reuses it). With a
+        ``WarmPool`` attached, the TE's device-resident params drain back
+        to host DRAM on the way out — the RELEASED → warm leg of the
+        cold-start ladder (DESIGN.md §10) — so a later scale-out comes up
+        from warm instead of cold."""
         self._log_state(handle, handle.transition(TEState.RELEASED))
+        asset = self._asset_name()
         for eng in self._members(handle):
-            off = self._window_of.pop(eng.name, None)
-            if off is not None:
-                self._free_windows.append(off)
+            if self.warm_pool is not None:
+                host = eng.release_params(
+                    to_host=not self.warm_pool.hit(asset))
+                if host is not None:
+                    self.warm_pool.put(asset, host, host_copy=False)
+            with self._window_lock:
+                off = self._window_of.pop(eng.name, None)
+                if off is not None:
+                    self._free_windows.append(off)
             if eng in self.engines:
                 self.engines.remove(eng)
         self._handles.remove(handle)      # shared list: RR sees the removal
@@ -536,7 +652,14 @@ class ServingJobEngine:
             return
         live = [h for h in self._handles if h.state is TEState.SERVING]
         loads = [h.refresh() for h in live]
-        if self.trigger is not None and self.trigger.observe(loads):
+        deficit = self.trigger.observe(loads) if self.trigger is not None \
+            else 0
+        if deficit > 1:
+            # capacity deficit (te_capacity set): one fire requests the
+            # whole fork TREE instead of one fork per re-arm cycle
+            self.scale_to(self.n_serving() + deficit)
+            return
+        if deficit:
             self._scale_out()
             return
         if self.drain_trigger is not None:
@@ -581,7 +704,7 @@ class ServingJobEngine:
             group = None
             src_handle = min(live, key=lambda h: h.load)
             src_engine = src_handle.decode_engine or src_handle.engine
-            name = f"te-scale{sum(1 for e in self.scale_events if e['kind'] == 'fork')}"
+            name = f"te-scale{self._scale_seq}"
             mode = "colocated"
         off, owned = self._alloc_window()
         ecfg = replace(self._base_ecfg, mode=mode, device_offset=off)
@@ -589,8 +712,9 @@ class ServingJobEngine:
         handle = (group if group is not None else
                   TEHandle(name, "colocated", state=TEState.PROVISIONING))
         te = FlowServe.fork_from(src_engine, ecfg, name=name)
-        if owned:
-            self._window_of[name] = off
+        self._commit_window(name, off, owned)
+        if group is None:
+            self._scale_seq += 1
         for eng in self.engines:
             eng.distflow.link_cluster([te.distflow])
         self.engines.append(te)
@@ -622,6 +746,174 @@ class ServingJobEngine:
         self.scheduler.tes[name] = handle
         self.scale_events.append({"kind": "fork", "step": self.steps,
                                   "te_id": name, "source": src_engine.name,
+                                  "event": event})
+
+    # ------------------------------------------------------------ mass scale
+    def _asset_name(self) -> str:
+        return getattr(self.bundle.cfg, "name", "model")
+
+    def _fork_sources(self) -> List[FlowServe]:
+        """Every SERVING engine whose params are still device-resident —
+        the fork-source pool a scale-out round fans out from."""
+        out: List[FlowServe] = []
+        for h in self._handles:
+            if h.state is not TEState.SERVING:
+                continue
+            out.extend(e for e in self._members(h) if e.fork_ready)
+        return out
+
+    def _fork_executor(self) -> FleetExecutor:
+        if self._fork_pool is None:
+            self._fork_pool = FleetExecutor(8)
+        return self._fork_pool
+
+    def scale_to(self, n: int, fan_out: bool = True,
+                 warmup: bool = False,
+                 pace: Optional[ModelAsset] = None) -> Dict[str, Any]:
+        """Mass scale-out to ``n`` SERVING TEs through the cold-start
+        ladder (DESIGN.md §10), in O(log N) FORK ROUNDS:
+
+        * round k forks one new TE from EVERY fork-ready SERVING engine —
+          each TE that reached SERVING in round k is a source in round
+          k+1, so the fleet doubles per round (λScale's multicast tree);
+          forks within a round run concurrently on executor threads
+          (``fork_from`` is executor-safe via the per-source RLock);
+        * when the round's deficit exceeds the source pool, the remainder
+          comes up from the DRAM-warm tier (``WarmPool``) — one host
+          entry serves any number of concurrent ``device_put``s;
+        * with neither a source nor a warm entry, bring-up is cold init.
+
+        ``fan_out=False`` degrades to serial one-at-a-time forking (the
+        bench baseline: identical registration path and final placement,
+        N-1 rounds instead of ceil(log2 N)). ``warmup`` precompiles a
+        small decode grid on each new TE before it's declared SERVING.
+        ``pace`` holds every bring-up job to the modeled full-size tier
+        cost of that asset (``scaling.tier_seconds``): the CPU sim's
+        smoke-scale copies finish in microseconds, so without pacing the
+        measured wall is pure python overhead — with it, each job's wall
+        is the larger of its real device work and the priced transfer,
+        the same modeled-cost idiom as ``FastScaler``. Returns the
+        executed plan (per-round TEs/sources/tiers + wall)."""
+        plan: Dict[str, Any] = {
+            "target": n, "start_serving": self.n_serving(),
+            "rounds": [], "tiers": {"fork": 0, "warm": 0, "cold": 0}}
+        t_all = time.monotonic()
+        asset = self._asset_name()
+        warm_params = self.warm_pool.get(asset) \
+            if self.warm_pool is not None else None
+        while self.n_serving() < n:
+            deficit = n - self.n_serving()
+            sources = self._fork_sources()
+            n_fork = min(deficit, len(sources))
+            n_rest = deficit - n_fork if warm_params is not None \
+                or not sources else 0
+            if not sources:
+                n_rest = deficit            # warm or cold: no source needed
+            if not fan_out:
+                n_fork = min(1, n_fork)
+                n_rest = 0 if n_fork else min(1, n_rest)
+            jobs: List[Tuple[str, int, bool, str, Optional[str], Any]] = []
+            for j in range(n_fork + n_rest):
+                off, owned = self._alloc_window()
+                name = f"te-scale{self._scale_seq}"
+                self._scale_seq += 1
+                ecfg = replace(self._base_ecfg, mode="colocated",
+                               device_offset=off)
+                if j < n_fork:
+                    tier, src = "fork", sources[j]
+                elif warm_params is not None:
+                    tier, src = "warm", None
+                else:
+                    tier, src = "cold", None
+                pace_s = tier_seconds(pace, tier) if pace is not None else 0.0
+                jobs.append((name, off, owned, tier,
+                             src.name if src is not None else None,
+                             self._job_bring_up(name, ecfg, tier, src,
+                                                warm_params, warmup,
+                                                pace_s=pace_s)))
+            t_round = time.monotonic()
+            if len(jobs) > 1:
+                pool = self._fork_executor()
+                for name, _, _, _, _, fn in jobs:
+                    pool.submit(name, fn)
+                done = dict(pool.collect(len(jobs)))
+            else:
+                done = {name: fn() for name, _, _, _, _, fn in jobs}
+            round_tes = []
+            for name, off, owned, tier, src_name, _ in jobs:
+                te, fork_s = done[name]
+                self._register_scaled(te, off, owned, tier, src_name,
+                                      fork_s, len(plan["rounds"]))
+                plan["tiers"][tier] += 1
+                round_tes.append(name)
+            plan["rounds"].append({
+                "round": len(plan["rounds"]), "tes": round_tes,
+                "sources": [j[4] for j in jobs if j[4] is not None],
+                "wall_s": time.monotonic() - t_round})
+        plan["wall_s"] = time.monotonic() - t_all
+        plan["n_serving"] = self.n_serving()
+        return plan
+
+    def _job_bring_up(self, name: str, ecfg: EngineConfig, tier: str,
+                      src: Optional[FlowServe], warm_params, warmup: bool,
+                      pace_s: float = 0.0):
+        """One bring-up closure, safe to run on an executor thread: builds
+        the TE through its tier's path and (optionally) precompiles a
+        small decode grid. ``pace_s`` > 0 pads the job to the modeled
+        full-size tier cost (a sleep releases the GIL, so padded jobs in
+        one round overlap exactly like real transfers on independent
+        links would). Registration stays on the driver thread."""
+        def job():
+            t0 = time.monotonic()
+            if tier == "fork":
+                te = FlowServe.fork_from(src, ecfg, name=name)
+            elif tier == "warm":
+                te = FlowServe.from_warm(self.bundle, warm_params, ecfg,
+                                         name=name)
+            else:
+                te = FlowServe(self.bundle, self.params, ecfg, name=name)
+            jax.block_until_ready(te.runner.params)
+            if warmup:
+                te.warmup_decode(max_pages=2, horizons=[1])
+            left = pace_s - (time.monotonic() - t0)
+            if left > 0:
+                time.sleep(left)
+            return te, time.monotonic() - t0
+        return job
+
+    def _register_scaled(self, te: FlowServe, off: int, owned: bool,
+                         tier: str, src_name: Optional[str], fork_s: float,
+                         rnd: int) -> None:
+        """Driver-thread registration of one scaled-out TE: commit its
+        window, link it into the fleet's DistFlow peer group, walk the
+        lifecycle to SERVING, and expose it to Algorithm 1."""
+        self._commit_window(te.name, off, owned)
+        for eng in self.engines:
+            eng.distflow.link_cluster([te.distflow])
+        self.engines.append(te)
+        event = None
+        if self.scaler is not None:
+            from repro.core.scaling import LoadResult
+            from repro.engine.distflow import _nbytes
+            asset = ModelAsset(name=self._asset_name(),
+                               n_bytes=_nbytes(self.params),
+                               tp=max(1, self.topology.tp))
+            # the bring-up already happened: hand its measured wall to the
+            # pipeline as the TE-Load step (tiered pricing, no double
+            # charge on the transfer fabric)
+            path = {"fork": "npu_fork_ici", "warm": "warm_pool",
+                    "cold": "cold_init"}[tier]
+            event = self.scaler.scale_one(
+                asset, optimized=True,
+                preloaded=LoadResult(path, fork_s, asset.n_bytes))
+        handle = TEHandle(te.name, "colocated", state=TEState.PROVISIONING)
+        handle.engine = te
+        self._bring_up(handle)
+        self._handles.append(handle)
+        self.scheduler.tes[te.name] = handle
+        self.scale_events.append({"kind": "fork", "step": self.steps,
+                                  "te_id": te.name, "source": src_name,
+                                  "tier": tier, "round": rnd,
                                   "event": event})
 
     # ------------------------------------------------------------ stats

@@ -214,6 +214,64 @@ class FlowServe:
         te.distflow.sim_clock += lr.seconds   # the fork target observed it too
         return te
 
+    @classmethod
+    def from_warm(cls, bundle: ModelBundle, host_params, ecfg: EngineConfig,
+                  name: str = "te-warm") -> "FlowServe":
+        """DRAM-warm bring-up (DESIGN.md §10): construct a TE from a
+        ``WarmPool``'s host-pinned params — ``device_put`` onto the TE's
+        device window replaces model re-init entirely. The pool entry is
+        only read, so any number of TEs can come up from one entry
+        concurrently. tp>1 TEs shard through the constructor's mesh path;
+        tp=1 TEs are explicitly homed here (the constructor only pins when
+        ``device_offset > 0``, but warm params must land on-device even in
+        window 0 or every dispatch would re-upload them)."""
+        if ecfg.tp <= 1:
+            dev = jax.devices()[ecfg.device_offset % jax.device_count()]
+            host_params = jax.device_put(host_params, dev)
+        return cls(bundle, host_params, ecfg, name=name)
+
+    @property
+    def fork_ready(self) -> bool:
+        """True while this TE's params are device-resident, i.e. it can act
+        as an NPU-fork source (a TE that drained its params back to the
+        warm pool on release is not)."""
+        return getattr(self.runner, "params", None) is not None
+
+    @_executor_safe
+    def release_params(self, to_host: bool = True):
+        """Drain this TE's device-resident params back to host DRAM (the
+        RELEASED → WarmPool leg of the cold-start ladder). Returns the host
+        pytree (``to_host=True``) or None; either way the device copy is
+        dropped and the engine stops being a fork source. Call only after
+        the TE is empty — it cannot serve afterwards."""
+        params = getattr(self.runner, "params", None)
+        if params is None:
+            return None
+        host = jax.tree.map(lambda a: np.asarray(a), params) if to_host \
+            else None
+        self.runner.params = None
+        return host
+
+    @_executor_safe
+    def cancel_queued(self) -> List[Request]:
+        """Pull every not-yet-fully-prefilled sequence out of this engine
+        (drain support, DESIGN.md §10): mid-PREFILL work on a draining TE
+        is re-submitted to the drain destination as a token-level restart
+        instead of finishing prefill locally. Returns the original
+        ``Request`` objects (req_id + arrival preserved, so latency
+        accounting spans the restart); their pages/slots here are freed
+        without preserving prefixes."""
+        out: List[Request] = []
+        for seq in list(self.scheduler.queued_seqs()):
+            req = self._requests.get(seq.seq_id)
+            if req is None:
+                continue
+            self.scheduler.remove(seq)
+            seq.extra.pop("_kv_pending", None)
+            self.release_request(seq.seq_id, keep_prefix=False)
+            out.append(req)
+        return out
+
     # ---------------------------------------------------------------- API
     @_executor_safe
     def add_request(self, req: Request) -> str:

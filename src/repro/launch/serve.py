@@ -65,6 +65,11 @@ def main() -> None:
                     choices=["dist_sched", "round_robin"],
                     help="JE placement policy for --topology (Algorithm 1 "
                          "vs the degenerate round-robin baseline)")
+    ap.add_argument("--scale-to", type=int, default=0,
+                    help="with --topology: mass scale-out to N SERVING TEs "
+                         "through the cold-start ladder before serving "
+                         "(DESIGN.md §10) — O(log N) fork rounds, "
+                         "DRAM-warm remainder, cold fallback")
     ap.add_argument("--fleet-threads", type=int, default=0,
                     help="per-TE executor threads for --topology "
                          "(core/fleet.py): >1 steps fleet units on pinned "
@@ -83,7 +88,8 @@ def main() -> None:
 
     if args.topology:
         from repro.core.scaling import (DrainTrigger, DRAMPageCache,
-                                        FastScaler, LoadSpreadTrigger)
+                                        FastScaler, LoadSpreadTrigger,
+                                        WarmPool)
         from repro.core.serving_plane import ServingJobEngine, TopologySpec
         topo = TopologySpec.parse(args.topology)
         if args.tp > 1:
@@ -97,14 +103,26 @@ def main() -> None:
                             max_batch_tokens=64, chunk_size=16,
                             max_decode_batch=8, decode_horizon=args.horizon,
                             fused_decode=not args.no_fused_decode)
+        warm = WarmPool()
         je = ServingJobEngine(bundle, params, topo, heatmap=hs.combined(),
                               prefill_lens=hs.prefill_lens,
                               decode_ratios=hs.decode_ratios,
                               policy=args.policy, ecfg=ecfg,
-                              scaler=FastScaler(DRAMPageCache()),
+                              scaler=FastScaler(DRAMPageCache(), warm=warm),
                               trigger=LoadSpreadTrigger(),
                               drain_trigger=DrainTrigger(),
+                              warm_pool=warm,
                               fleet_threads=args.fleet_threads)
+        if args.scale_to > je.n_serving():
+            plan = je.scale_to(args.scale_to)
+            tiers = " ".join(f"{k}={v}" for k, v in plan["tiers"].items()
+                             if v)
+            print(f"scale_to({args.scale_to}): {len(plan['rounds'])} rounds "
+                  f"in {plan['wall_s']:.2f}s [{tiers}] "
+                  f"serving={plan['n_serving']}")
+            for r in plan["rounds"]:
+                print(f"  round {r['round']}: +{len(r['tes'])} TEs "
+                      f"({r['wall_s']:.2f}s) from {r['sources'] or ['-']}")
         t0 = time.monotonic()
         for p in prompts:
             je.submit(tok.encode(p), sampling=sp)

@@ -1,0 +1,363 @@
+"""Cold-start ladder + fork-tree mass scale-out tests (DESIGN.md §10).
+
+Fast subset: WarmPool accounting (hit/miss/LRU eviction), the tier cost
+model, the deficit-reporting scale-out trigger, drain-resurgence, the
+window allocator's reservation protocol under concurrent fork rounds,
+and structural ``scale_to`` smokes (round counts, placement) — none of
+which serve tokens, so no jit compiles. The end-to-end ladder tests
+(fork-tree serving parity, released-params → warm-tier scale-out,
+drain-cancel on resurgence, mid-PREFILL re-submission) spin live
+engines and live in the slow lane (markers: ``slow`` + ``fleet``).
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fleet import TEState
+from repro.core.scaling import (DrainTrigger, DRAMPageCache, FastScaler,
+                                LoadSpreadTrigger, ModelAsset, WarmPool,
+                                tier_seconds)
+from repro.core.serving_plane import ServingJobEngine, TopologySpec
+from repro.engine import EngineConfig, FlowServe, Request, SamplingParams
+from repro.models import get_model
+
+SP = SamplingParams(temperature=0.0, max_new_tokens=10, stop_on_eos=False)
+LENS, RATIOS = [16, 64], [0.25, 1.0]
+COLO_HEAT = -np.ones((2, 2))
+
+
+def _ecfg(**kw):
+    base = dict(n_pages=64, page_size=8, max_batch_tokens=32,
+                chunk_size=8, max_decode_batch=4)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _plane(bundle, params, topo, **kw):
+    return ServingJobEngine(bundle, params, topo, heatmap=COLO_HEAT,
+                            prefill_lens=LENS, decode_ratios=RATIOS,
+                            ecfg=_ecfg(), **kw)
+
+
+def _prompts(n, length=14, seed0=0):
+    return [[1] + [int(x) for x in
+                   np.random.RandomState(seed0 + i).randint(3, 200, length)]
+            for i in range(n)]
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    bundle = get_model("qwen3-8b", smoke=True)
+    params = bundle.init_params(jax.random.PRNGKey(0), jnp.float32)
+    return bundle, params
+
+
+def _reference_tokens(bundle, params, prompts, sp=SP):
+    ref = FlowServe(bundle, params, _ecfg(), name="sref")
+    ids = [ref.add_request(Request(prompt_tokens=list(p), sampling=sp))
+           for p in prompts]
+    comps = {c.req_id: c.tokens for c in ref.run_to_completion()}
+    return [comps[i] for i in ids]
+
+
+# ---------------------------------------------------------------------------
+# Fast: WarmPool accounting
+# ---------------------------------------------------------------------------
+
+
+def _params(kb: int, seed: int = 0):
+    return {"w": np.full((kb, 256), float(seed), np.float32)}  # kb * 1 KiB
+
+
+def test_warm_pool_hit_miss_and_lru_eviction():
+    pool = WarmPool(capacity_bytes=3 * 1024 * 1024)
+    assert pool.get("a") is None                      # miss on empty
+    assert pool.misses == 1
+    assert pool.put("a", _params(1024, 1))
+    assert pool.put("b", _params(1024, 2))
+    assert pool.put("c", _params(1024, 3))
+    assert pool.used() == 3 * 1024 * 1024
+    # a hit refreshes LRU order: touch "a" so "b" is now the LRU victim
+    assert pool.get("a") is not None
+    assert pool.hits == 1
+    assert pool.put("d", _params(1024, 4))            # evicts exactly "b"
+    assert pool.evictions == 1
+    assert pool.bytes_evicted == 1024 * 1024
+    assert not pool.hit("b") and pool.hit("a") and pool.hit("c")
+    # hit() is a non-counting peek; stats() reflects the full history
+    hits = pool.hits
+    pool.hit("a")
+    assert pool.hits == hits
+    s = pool.stats()
+    assert (s["hits"], s["misses"], s["evictions"]) == (1, 1, 1)
+    assert s["resident"] == 3
+
+
+def test_warm_pool_rejects_oversize_and_reput_is_lru_touch():
+    pool = WarmPool(capacity_bytes=1024 * 1024)
+    assert not pool.put("huge", _params(2048))        # never partially resident
+    assert pool.used() == 0
+    assert pool.put("a", _params(512, 1))
+    before = pool.used()
+    assert pool.put("a", _params(512, 9))             # re-put: touch, not copy
+    assert pool.used() == before
+    assert float(pool.get("a")["w"][0, 0]) == 1.0     # original entry kept
+
+
+def test_warm_pool_put_materializes_host_copy():
+    pool = WarmPool()
+    dev = {"w": jnp.ones((8, 8))}
+    assert pool.put("m", dev, host_copy=True)
+    got = pool.get("m")
+    assert isinstance(got["w"], np.ndarray)
+
+
+# ---------------------------------------------------------------------------
+# Fast: tier cost model + triggers
+# ---------------------------------------------------------------------------
+
+
+def test_tier_seconds_orders_the_ladder():
+    asset = ModelAsset("m", n_bytes=int(16e9), tp=1)
+    fork, warm, cold = (tier_seconds(asset, t)
+                        for t in ("fork", "warm", "cold"))
+    assert fork < warm < cold                 # ICI fork < PCIe warm < SSD cold
+    assert fork == pytest.approx(16e9 / 50e9)
+    # tp shards the per-TE bytes
+    sharded = ModelAsset("m", n_bytes=int(16e9), tp=4)
+    assert tier_seconds(sharded, "fork") == pytest.approx(fork / 4)
+
+
+def test_load_spread_trigger_reports_deficit():
+    trig = LoadSpreadTrigger(threshold=0.5, patience=1, min_load=1.0,
+                             te_capacity=10.0)
+    # 2 TEs carrying 50 tokens of work need ceil(50/10)=5 TEs: deficit 3
+    assert trig.observe([40.0, 10.0]) == 3
+    assert trig.last_deficit == 3
+    # one-shot: disarmed until the spread recovers below threshold
+    assert trig.observe([40.0, 10.0]) == 0
+    # without te_capacity the contract degrades to the old fork-one bool
+    legacy = LoadSpreadTrigger(threshold=0.5, patience=1, min_load=1.0)
+    assert legacy.observe([40.0, 10.0]) == 1
+    assert not legacy.observe([5.0, 5.0])     # 0 is falsy (bool-compatible)
+
+
+def test_drain_trigger_resurgent():
+    trig = DrainTrigger(low_watermark=2.0, resurge_factor=4.0)
+    assert not trig.resurgent([])
+    assert not trig.resurgent([1.0, 2.0])     # mean 1.5 <= 8.0
+    assert trig.resurgent([10.0, 12.0])       # mean 11 > 8.0
+
+
+# ---------------------------------------------------------------------------
+# Fast: window allocator reservation protocol (concurrent fork rounds)
+# ---------------------------------------------------------------------------
+
+
+def test_alloc_window_concurrent_uniqueness(qwen):
+    """A round of concurrent forks allocates windows from executor threads
+    BEFORE any of them registers: every owned offset must be unique, and
+    reservations must clear once the TEs commit."""
+    bundle, params = qwen
+    je = _plane(bundle, params, TopologySpec(pd=0, colo=1))
+    got, lock = [], threading.Lock()
+
+    def grab():
+        off, owned = je._alloc_window()
+        with lock:
+            got.append((off, owned))
+
+    threads = [threading.Thread(target=grab) for _ in range(7)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    owned = [off for off, ok in got if ok]
+    assert len(owned) == len(set(owned)), "duplicate window handed out"
+    assert set(owned) <= set(range(1, jax.device_count()))
+    for i, (off, ok) in enumerate(got):
+        je._commit_window(f"te-x{i}", off, ok)
+    assert je._reserved_windows == set()
+
+
+def test_alloc_window_skips_reserved_freelist_entry(qwen):
+    """Regression: a release landing mid-round pushes an offset onto the
+    free list while an in-flight fork still holds its reservation — the
+    next allocation must NOT re-hand that offset."""
+    bundle, params = qwen
+    je = _plane(bundle, params, TopologySpec(pd=0, colo=1))
+    off, owned = je._alloc_window()
+    assert owned and off in je._reserved_windows
+    je._free_windows.append(off)              # stale/racing free-list entry
+    off2, owned2 = je._alloc_window()
+    assert owned2 and off2 != off
+    # the stale entry is dropped (its holder will commit that window), so
+    # a third allocation can't double-assign it either
+    assert off not in je._free_windows
+    off3, owned3 = je._alloc_window()
+    assert owned3 and off3 not in (off, off2)
+
+
+# ---------------------------------------------------------------------------
+# Fast: structural scale_to smokes (no serving, no compiles)
+# ---------------------------------------------------------------------------
+
+
+def test_scale_to_two_te_smoke(qwen):
+    bundle, params = qwen
+    je = _plane(bundle, params, TopologySpec(pd=0, colo=1))
+    plan = je.scale_to(2)
+    assert plan["n_serving"] == je.n_serving() == 2
+    assert len(plan["rounds"]) == 1
+    assert plan["tiers"] == {"fork": 1, "warm": 0, "cold": 0}
+    assert plan["rounds"][0]["sources"] == ["te-colo0"]
+    assert je.scheduler.tes["te-scale0"].state is TEState.SERVING
+    offs = list(je._window_of.values())
+    assert len(offs) == len(set(offs)) == 2
+    je.close()
+
+
+def test_fork_tree_round_counts(qwen):
+    """1→8 doubles per round (3 rounds of 1/2/4 forks), while the serial
+    baseline takes N-1 = 7 rounds to the same fleet size."""
+    bundle, params = qwen
+    je = _plane(bundle, params, TopologySpec(pd=0, colo=1))
+    plan = je.scale_to(8)
+    assert [len(r["tes"]) for r in plan["rounds"]] == [1, 2, 4]
+    assert plan["tiers"]["fork"] == 7
+    assert je.n_serving() == 8
+    offs = list(je._window_of.values())
+    assert sorted(offs) == list(range(8))     # disjoint windows, no fallback
+    je.close()
+    je = _plane(bundle, params, TopologySpec(pd=0, colo=1))
+    serial = je.scale_to(8, fan_out=False)
+    assert [len(r["tes"]) for r in serial["rounds"]] == [1] * 7
+    assert je.n_serving() == 8
+    je.close()
+
+
+# ---------------------------------------------------------------------------
+# Slow: the ladder end to end on live engines
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.fleet
+def test_fork_tree_serving_parity(qwen):
+    """Greedy tokens through a freshly grown fork tree == the single-TE
+    reference; round-robin placement exercises every forked TE."""
+    bundle, params = qwen
+    prompts = _prompts(8)
+    je = _plane(bundle, params, TopologySpec(pd=0, colo=1),
+                policy="round_robin")
+    je.scale_to(4)
+    from repro.core.scheduling import round_robin_scheduler
+    je._rr = round_robin_scheduler(je._handles)
+    rids = [je.submit(list(p), sampling=SP) for p in prompts]
+    comps = {c.req_id: c.tokens for c in je.run_to_completion()}
+    assert len(comps) == len(prompts)
+    assert [comps[r] for r in rids] == _reference_tokens(bundle, params,
+                                                         prompts)
+    assert all(e.decode_steps > 0 for e in je.engines)
+    je.close()
+
+
+@pytest.mark.slow
+@pytest.mark.fleet
+def test_release_feeds_warm_pool_then_warm_scale_out(qwen):
+    """Scale-in drains a TE's device-resident params back to host DRAM
+    (RELEASED → warm leg); the next ``scale_to`` brings the remainder up
+    from the WarmPool instead of cold, with serving parity."""
+    bundle, params = qwen
+    pool = WarmPool()
+    asset = bundle.cfg.name
+    je = _plane(bundle, params, TopologySpec(pd=0, colo=2),
+                policy="round_robin", warm_pool=pool)
+    je.submit(_prompts(1)[0], sampling=SP)
+    je.run_to_completion()
+    je.drain("te-colo1")
+    je.run_to_completion()
+    assert pool.hit(asset), "released params must land in the warm pool"
+    assert je.n_serving() == 1
+    # deficit 2 > 1 fork source: one round = 1 fork + 1 DRAM-warm bring-up
+    plan = je.scale_to(3)
+    assert len(plan["rounds"]) == 1
+    assert plan["tiers"] == {"fork": 1, "warm": 1, "cold": 0}
+    assert pool.hits >= 1
+    prompts = _prompts(4, seed0=30)
+    from repro.core.scheduling import round_robin_scheduler
+    je._rr = round_robin_scheduler(je._handles)
+    rids = [je.submit(list(p), sampling=SP) for p in prompts]
+    comps = {c.req_id: c.tokens for c in je.run_to_completion()}
+    assert [comps[r] for r in rids] == _reference_tokens(bundle, params,
+                                                         prompts)
+    je.close()
+
+
+@pytest.mark.slow
+@pytest.mark.fleet
+def test_drain_cancel_on_load_resurgence(qwen):
+    """A load resurgence while a TE drains legally walks it DRAINING →
+    SERVING (drain-cancel) instead of releasing capacity the fleet is
+    about to need; admissions resume and parity holds."""
+    bundle, params = qwen
+    trig = DrainTrigger(low_watermark=0.5, patience=100,
+                        resurge_factor=1.0)
+    je = _plane(bundle, params, TopologySpec(pd=0, colo=2),
+                policy="round_robin", drain_trigger=trig)
+    victim = je.handles[1]
+    je.drain(victim.te_id)
+    assert not victim.admitting
+    # resurgence: the surviving TE's load shoots past factor*watermark
+    prompts = _prompts(6, seed0=60)
+    rids = [je.submit(list(p), sampling=SP) for p in prompts]
+    je.step()
+    assert victim.state is TEState.SERVING, "drain must have been cancelled"
+    assert victim.admitting
+    kinds = [e["kind"] for e in je.scale_events]
+    assert kinds[:2] == ["drain", "drain_cancel"]
+    assert "release" not in kinds
+    comps = {c.req_id: c.tokens for c in je.run_to_completion()}
+    assert [comps[r] for r in rids] == _reference_tokens(bundle, params,
+                                                         prompts)
+    assert [h.te_id for h in je.handles] == ["te-colo0", "te-colo1"]
+    je.close()
+
+
+@pytest.mark.slow
+@pytest.mark.fleet
+def test_drain_resubmits_mid_prefill_to_destination(qwen):
+    """Mid-PREFILL sequences on a draining TE re-enter the drain
+    destination's scheduler from the prompt (token-level restart) instead
+    of finishing prefill on a TE that's leaving — with greedy parity and
+    the restart recorded in ``resubmits``, not ``scale_events``."""
+    bundle, params = qwen
+    prompts = _prompts(4, length=40, seed0=80)    # > chunk: multi-step prefill
+    je = _plane(bundle, params, TopologySpec(pd=0, colo=2),
+                policy="round_robin")
+    rids = [je.submit(list(p), sampling=SP) for p in prompts]
+    victim = je.handles[1]
+    assert any(e.scheduler.queued_seqs() for e in [victim.engine]), \
+        "victim must hold not-yet-prefilled work for the regression"
+    je.drain(victim.te_id)
+    je.step()                                     # pump: re-submission happens
+    moved = {r["req_id"] for r in je.resubmits}
+    assert moved, "queued prefills must have been re-submitted"
+    assert all(r["from"] == "te-colo1" and r["to"] == "te-colo0"
+               for r in je.resubmits)
+    # the moved requests' serving tasks re-point at the destination while
+    # still in flight (records pop on completion)
+    for rid in moved:
+        rec = je.requests[rid]
+        assert any(t.te_id == "te-colo0" for t in rec.job.tasks)
+    comps = {c.req_id: c.tokens for c in je.run_to_completion()}
+    assert len(comps) == 4
+    assert [comps[r] for r in rids] == _reference_tokens(bundle, params,
+                                                         prompts)
+    kinds = [e["kind"] for e in je.scale_events]
+    assert kinds == ["drain", "release"]          # routing isn't fleet shape
+    assert victim.state is TEState.RELEASED
+    je.close()

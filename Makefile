@@ -5,7 +5,7 @@
 PYTEST   := PYTHONPATH=src python -m pytest
 XLA_HOST := XLA_FLAGS="--xla_force_host_platform_device_count=8"
 
-.PHONY: tier1 fast test-fleet bench-tp bench-pd bench-hotloop bench-serving bench-scaleout bench help
+.PHONY: tier1 fast test-fleet test-faults bench-tp bench-pd bench-hotloop bench-serving bench-scaleout bench-faults bench help
 
 tier1:  ## full tier-1 suite (ROADMAP.md verify command) on 8 simulated devices
 	$(XLA_HOST) $(PYTEST) -x -q
@@ -33,6 +33,12 @@ bench-scaleout:  ## cold-start ladder + fork-tree 1->N scale-out (--json -> BENC
 
 test-fleet:  ## just the multi-TE elastic-fleet lifecycle suite (slow lane)
 	$(XLA_HOST) $(PYTEST) -x -q -m fleet
+
+test-faults:  ## fault-injection + recovery suite (DESIGN.md §11)
+	$(XLA_HOST) $(PYTEST) -x -q -m faults
+
+bench-faults:  ## kill 1-of-N TEs mid-burst: recovery time, goodput dip, parity (--json -> BENCH_fault_recovery.json)
+	$(XLA_HOST) PYTHONPATH=src python -m benchmarks.run --only fault_recovery --json
 
 bench:  ## full paper-figure benchmark harness (XLA_HOST so tp_engine gets devices)
 	$(XLA_HOST) PYTHONPATH=src python -m benchmarks.run

@@ -1,0 +1,211 @@
+"""Fault injection + recovery on the live serving plane (DESIGN.md §11).
+
+DeepServe's production posture (§7) is detect → contain → replace with
+in-flight work recovered, not dropped. This bench kills 1-of-N SERVING
+TEs mid-burst with a seeded ``FaultPlan`` and measures what that costs:
+
+* **completion** — 100% of the burst completes; restarted requests are
+  counted (``restart_counts``), none lost, none duplicated;
+* **recovery time** — wall from crash detection to the fleet repaired
+  (``scale_to`` back to N from surviving fork sources) AND every
+  restarted request completed;
+* **goodput dip** — same burst on an identical no-fault plane; the dip
+  is the throughput lost to the kill (re-prefill waste + repair);
+* **parity** — greedy tokens vs the no-fault run, for every request:
+  a restart re-runs from the PROMPT at temperature 0, so even restarted
+  requests must reproduce the reference tokens exactly.
+
+The fault plan's seed picks the victim deterministically
+(``FaultPlan.choose_victim``) and is recorded in the JSON row, so a run
+is replayable bit-for-bit.
+
+    PYTHONPATH=src python benchmarks/bench_fault_recovery.py [--seed 7]
+
+Also exposes run() -> CSV rows for benchmarks/run.py (key
+``fault_recovery``; ``--json`` → BENCH_fault_recovery.json).
+"""
+from __future__ import annotations
+
+import os
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = \
+        (_flags + " --xla_force_host_platform_device_count=8").strip()
+
+import argparse
+import time
+from dataclasses import replace as _drep
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config, smoke_config
+from repro.core.faults import FaultPlan, FaultSpec
+from repro.core.serving_plane import ServingJobEngine, TopologySpec
+from repro.engine import EngineConfig, SamplingParams
+from repro.models import get_model
+
+HEAT = (-np.ones((2, 2)), [24, 84], [0.1, 3.0])
+# long enough that the burst is still mid-flight at the kill step
+SP = SamplingParams(temperature=0.0, max_new_tokens=24, stop_on_eos=False)
+N_TES = 3
+N_REQS = 12
+KILL_STEP = 3
+
+
+def _bench_model():
+    cfg = _drep(smoke_config(get_config("qwen3-8b")), name="qwen3-8b-bench",
+                d_model=256, n_heads=8, head_dim=32, d_ff=512)
+    bundle = get_model(cfg)
+    params = bundle.init_params(jax.random.PRNGKey(0), jnp.float32)
+    return bundle, params
+
+
+def _ecfg(**kw):
+    base = dict(n_pages=64, page_size=8, max_batch_tokens=64,
+                chunk_size=16, max_decode_batch=4)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _plane(bundle, params, fault_plan=None) -> ServingJobEngine:
+    return ServingJobEngine(bundle, params, TopologySpec(colo=N_TES),
+                            heatmap=HEAT[0], prefill_lens=HEAT[1],
+                            decode_ratios=HEAT[2], ecfg=_ecfg(),
+                            policy="round_robin", fault_plan=fault_plan)
+
+
+def _prompts(n, length=14, seed0=0):
+    return [[1] + [int(x) for x in
+                   np.random.RandomState(seed0 + i).randint(3, 200, length)]
+            for i in range(n)]
+
+
+def _run_burst(je, prompts, repair_to=None, max_steps=20000):
+    """Drive one burst to completion; on the first TE failure, repair the
+    fleet with ``scale_to(repair_to)``. Returns per-rid tokens (in submit
+    order), wall, and the failure/repair timeline."""
+    rids = [je.submit(list(p), SP) for p in prompts]
+    t0 = time.monotonic()
+    t_fail = t_repaired = None
+    done_at = {}
+    for _ in range(max_steps):
+        if not je.has_work():
+            break
+        comps = je.step()
+        now = time.monotonic()
+        for c in comps:
+            done_at[c.req_id] = now
+        if t_fail is None and any(e["kind"] == "te_failure"
+                                  for e in je.scale_events):
+            t_fail = now
+            if repair_to is not None:
+                je.scale_to(repair_to)
+                t_repaired = time.monotonic()
+    wall = time.monotonic() - t0
+    toks = {c.req_id: c.tokens for c in je.completions}
+    return {"rids": rids, "tokens": [toks.get(r) for r in rids],
+            "n_comps": len(je.completions), "wall": wall,
+            "t0": t0, "t_fail": t_fail, "t_repaired": t_repaired,
+            "done_at": done_at}
+
+
+def bench_kill_recovery(bundle, params, seed: int) -> dict:
+    """Kill 1-of-N mid-burst (seeded victim) vs the identical no-fault
+    run. The no-fault run is both the goodput baseline and the
+    greedy-token parity oracle."""
+    prompts = _prompts(N_REQS)
+    base = _plane(bundle, params)
+    try:
+        ref = _run_burst(base, prompts)
+    finally:
+        base.close()
+
+    fp = FaultPlan(seed=seed)
+    victim = fp.choose_victim([f"te-colo{i}" for i in range(N_TES)])
+    fp.add(FaultSpec("te_crash", te=victim, at_step=KILL_STEP))
+    je = _plane(bundle, params, fault_plan=fp)
+    try:
+        got = _run_burst(je, prompts, repair_to=N_TES)
+        restarts = je.restart_counts()
+        restarted_rids = set(restarts)
+        recovery_end = got["t_repaired"] or got["t_fail"]
+        for rid in restarted_rids:
+            if rid in got["done_at"]:
+                recovery_end = max(recovery_end, got["done_at"][rid])
+        completed = sum(1 for t in got["tokens"] if t is not None)
+        parity = [a == b for a, b in zip(got["tokens"], ref["tokens"])]
+        unaffected = [ok for rid, ok in zip(got["rids"], parity)
+                      if rid not in restarted_rids]
+        out = {
+            "seed": seed, "victim": victim, "kill_step": KILL_STEP,
+            "fired": fp.fired("te_crash"),
+            "n_reqs": N_REQS, "completed": completed,
+            "lost": N_REQS - completed,
+            "dup": got["n_comps"] - completed,
+            "restarts": sum(restarts.values()),
+            "n_restarted": len(restarts),
+            "recovery_s": (recovery_end - got["t_fail"]
+                           if got["t_fail"] is not None else float("nan")),
+            "n_serving_after": je.n_serving(),
+            "wall_fault_s": got["wall"], "wall_nofault_s": ref["wall"],
+            # goodput = tokens/wall over the same token work: the dip is
+            # the fraction of no-fault throughput lost to the kill
+            "goodput_dip": max(0.0, 1.0 - ref["wall"] / got["wall"]),
+            "parity_all": all(parity),
+            "parity_unaffected": all(unaffected) if unaffected else True,
+        }
+    finally:
+        je.close()
+    return out
+
+
+# ------------------------------------------------------------- harness
+def run() -> list:
+    """CSV rows for benchmarks/run.py: (name, value, derived)."""
+    bundle, params = _bench_model()
+    # warm imports/BLAS so the timed planes measure serving, not first-use
+    warm = _plane(bundle, params)
+    try:
+        _run_burst(warm, _prompts(2, seed0=90))
+    finally:
+        warm.close()
+    r = bench_kill_recovery(bundle, params, seed=7)
+    return [(
+        f"fault_recovery_kill_1of{N_TES}", r["recovery_s"] * 1e6,
+        f"seed={r['seed']};victim={r['victim']};kill_step={r['kill_step']};"
+        f"restarts={r['restarts']};"
+        f"completed={r['completed']}/{r['n_reqs']};"
+        f"lost={r['lost']};dup={r['dup']};"
+        f"parity_all={r['parity_all']};"
+        f"parity_unaffected={r['parity_unaffected']};"
+        f"goodput_dip={r['goodput_dip']:.3f};"
+        f"recovery_s={r['recovery_s']:.3f};"
+        f"n_serving_after={r['n_serving_after']}")]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args()
+    bundle, params = _bench_model()
+    print(f"devices={jax.device_count()} model={bundle.cfg.name}")
+    r = bench_kill_recovery(bundle, params, seed=args.seed)
+    print(f"kill 1-of-{N_TES} (seed {r['seed']} -> {r['victim']} at step "
+          f"{r['kill_step']}, fired={r['fired']}):")
+    print(f"  completed {r['completed']}/{r['n_reqs']} "
+          f"(lost={r['lost']} dup={r['dup']}) with {r['restarts']} "
+          f"restarts over {r['n_restarted']} requests")
+    print(f"  recovery {r['recovery_s']:.3f}s; fleet back to "
+          f"{r['n_serving_after']} SERVING")
+    print(f"  wall {r['wall_fault_s']:.2f}s vs no-fault "
+          f"{r['wall_nofault_s']:.2f}s -> goodput dip "
+          f"{r['goodput_dip']:.1%}")
+    print(f"  greedy parity: all={r['parity_all']} "
+          f"unaffected={r['parity_unaffected']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -31,6 +31,7 @@ MODULES = [
     ("decode_hotloop", "benchmarks.bench_decode_hotloop"),
     ("serving_plane", "benchmarks.bench_serving_plane"),
     ("scale_out", "benchmarks.bench_scale_out"),
+    ("fault_recovery", "benchmarks.bench_fault_recovery"),
 ]
 
 

@@ -49,6 +49,7 @@ class Status(str, enum.Enum):
     RUNNING = "running"
     DONE = "done"
     FAILED = "failed"
+    REJECTED = "rejected"          # shed by admission control (§11)
 
 
 @dataclass

@@ -50,13 +50,22 @@ class TaskExecutor:
         self.last_heartbeat = time.monotonic()
 
     def fail(self) -> None:
+        """Mark the TE crashed: unhealthy + lifecycle FAILED (legal from
+        SERVING/DRAINING/WARMING; a TE already RELEASED stays released)."""
         self.healthy = False
+        if self.state in (TEState.SERVING, TEState.DRAINING,
+                          TEState.WARMING):
+            self.transition(TEState.FAILED)
 
     def reboot(self) -> None:
         """§7: reboot the component; RTC state is soft (recomputed), so no
-        consistency protocol is needed."""
+        consistency protocol is needed. A FAILED TE walks the legal
+        FAILED → WARMING → SERVING path back (reboot-in-place)."""
         self.healthy = True
         self.heartbeat()
+        if self.state is TEState.FAILED:
+            self.transition(TEState.WARMING)
+            self.transition(TEState.SERVING)
         if self.engine is not None and getattr(self.engine, "rtc", None) is not None:
             # soft state: drop the prefix index; pages are reclaimed lazily
             from repro.engine.rtc import RelationalTensorCache
@@ -155,7 +164,8 @@ class ClusterManager:
         rebooted = []
         now = time.monotonic()
         for te in self.tes.values():
-            if not te.healthy or now - te.last_heartbeat > self.heartbeat_timeout:
+            if not te.healthy or te.state is TEState.FAILED \
+                    or now - te.last_heartbeat > self.heartbeat_timeout:
                 te.reboot()
                 rebooted.append(te.te_id)
         return rebooted

@@ -35,6 +35,7 @@ class TEState(str, enum.Enum):
     WARMING = "warming"             # weights resident, jit warmup running
     SERVING = "serving"             # admitting + executing
     DRAINING = "draining"           # admissions stopped; emptying (§9 scale-in)
+    FAILED = "failed"               # crashed; quarantined, work recovering
     RELEASED = "released"           # device window freed; terminal
 
 
@@ -44,9 +45,12 @@ class LifecycleError(RuntimeError):
 
 _LEGAL: Dict[TEState, Tuple[TEState, ...]] = {
     TEState.PROVISIONING: (TEState.WARMING, TEState.RELEASED),
-    TEState.WARMING: (TEState.SERVING,),
-    TEState.SERVING: (TEState.DRAINING,),
-    TEState.DRAINING: (TEState.SERVING, TEState.RELEASED),
+    TEState.WARMING: (TEState.SERVING, TEState.FAILED),
+    TEState.SERVING: (TEState.DRAINING, TEState.FAILED),
+    TEState.DRAINING: (TEState.SERVING, TEState.RELEASED, TEState.FAILED),
+    # FAILED -> WARMING is reboot-in-place (§7); FAILED -> RELEASED is
+    # replace (quarantine frees the device window for a fresh fork)
+    TEState.FAILED: (TEState.WARMING, TEState.RELEASED),
     TEState.RELEASED: (),
 }
 
@@ -123,20 +127,23 @@ class FleetExecutor:
             raise RuntimeError("executor closed")
         self._worker_for(unit_id).inbox.put((unit_id, fn))
 
-    def collect(self, n: int) -> List[Tuple[Any, Any]]:
-        """Block until ``n`` events complete; returns [(unit_id, result)].
-        Collects ALL ``n`` before re-raising the first worker exception so
-        no event is left orphaned in the queue."""
-        out: List[Tuple[Any, Any]] = []
-        first_exc: Optional[BaseException] = None
+    def collect(self, n: int) -> Tuple[List[Tuple[Any, Any]],
+                                       List[Tuple[Any, BaseException]]]:
+        """Block until ``n`` events complete; returns ``(done, failed)``
+        where ``done`` is [(unit_id, result)] for units that finished and
+        ``failed`` is [(unit_id, exc)] for units whose fn raised. A failing
+        unit is QUARANTINED by the caller — its failure never aborts the
+        other units' step and collect itself never raises (DESIGN.md §11).
+        All ``n`` events are always drained so none is left orphaned."""
+        done: List[Tuple[Any, Any]] = []
+        failed: List[Tuple[Any, BaseException]] = []
         for _ in range(n):
             tag, result, exc = self._results.get()
-            if exc is not None and first_exc is None:
-                first_exc = exc
-            out.append((tag, result))
-        if first_exc is not None:
-            raise first_exc
-        return out
+            if exc is not None:
+                failed.append((tag, exc))
+            else:
+                done.append((tag, result))
+        return done, failed
 
     def close(self) -> None:
         self._closed = True

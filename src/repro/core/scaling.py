@@ -42,6 +42,12 @@ class ModelAsset:
     tp: int = 1                         # partitions (each TE loads 1/tp)
 
 
+class WarmPoolMismatchError(ValueError):
+    """A warm-pool entry was requested (or constructed from) under the
+    wrong model-asset identity — refusing to silently build a TE from the
+    wrong params (DESIGN.md §11)."""
+
+
 @dataclass
 class PreWarmedPod:
     pod_id: str
@@ -74,6 +80,7 @@ class WarmPool:
         self.capacity = capacity_bytes
         self.entries: "OrderedDict[str, Any]" = OrderedDict()
         self.sizes: Dict[str, int] = {}
+        self.tags: Dict[str, str] = {}   # entry -> model-asset identity
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -82,13 +89,23 @@ class WarmPool:
     def used(self) -> int:
         return sum(self.sizes.values())
 
-    def put(self, name: str, params, host_copy: bool = True) -> bool:
+    def put(self, name: str, params, host_copy: bool = True,
+            tag: Optional[str] = None) -> bool:
         """Pin one asset's params in host DRAM, LRU-evicting until it fits.
         ``params`` may be device-resident — ``host_copy=True`` materializes
         numpy leaves (callers that already hold a host copy, e.g. a
         released TE's drained params, pass False). Returns False when the
-        asset alone exceeds capacity (dropped, not partially resident)."""
+        asset alone exceeds capacity (dropped, not partially resident).
+        ``tag`` records the model-asset identity of the entry (defaults to
+        ``name``); re-putting an existing entry under a DIFFERENT tag is an
+        integrity violation and raises ``WarmPoolMismatchError``."""
+        tag = tag or name
         if name in self.entries:
+            if self.tags.get(name, name) != tag:
+                raise WarmPoolMismatchError(
+                    f"warm-pool entry {name!r} is tagged "
+                    f"{self.tags.get(name, name)!r}; refusing re-put under "
+                    f"tag {tag!r}")
             self.entries.move_to_end(name)
             return True
         n = _nbytes(params)
@@ -98,21 +115,31 @@ class WarmPool:
             victim, _ = self.entries.popitem(last=False)
             self.evictions += 1
             self.bytes_evicted += self.sizes.pop(victim)
+            self.tags.pop(victim, None)
         if host_copy:
             import jax
             params = jax.tree.map(lambda a: np.asarray(a), params)
         self.entries[name] = params
         self.sizes[name] = n
+        self.tags[name] = tag
         return True
 
-    def get(self, name: str):
+    def get(self, name: str, tag: Optional[str] = None):
         """The host-pinned params for ``name`` (hit, refreshes LRU order)
         or None (miss). Hit/miss counters are the accounting the scale-out
-        path reports per bring-up tier."""
+        path reports per bring-up tier. Passing ``tag`` asserts the model-
+        asset identity the caller is about to build a TE for: a mismatch
+        raises ``WarmPoolMismatchError`` instead of silently handing back
+        the wrong weights."""
         params = self.entries.get(name)
         if params is None:
             self.misses += 1
             return None
+        if tag is not None and self.tags.get(name, name) != tag:
+            raise WarmPoolMismatchError(
+                f"warm-pool entry {name!r} is tagged "
+                f"{self.tags.get(name, name)!r}, not {tag!r} — wrong model "
+                f"asset for this bring-up")
         self.hits += 1
         self.entries.move_to_end(name)
         return params

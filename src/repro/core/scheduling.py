@@ -206,7 +206,13 @@ class DistributedScheduler:
         # admitting — they finish or migrate out what they already hold
         tes = [t for t in self.tes.values() if t.admitting]
         if not tes:             # pathological (everything draining): any
-            tes = list(self.tes.values())   # placement beats dropping
+            # placement beats dropping — but NEVER route to a crashed or
+            # released TE (§11: health gates both schedulers)
+            tes = [t for t in self.tes.values()
+                   if t.state not in (TEState.FAILED, TEState.RELEASED)]
+        if not tes:
+            raise RuntimeError("dist_sched: no routable TE (all failed "
+                               "or released)")
         for te in tes:          # live handles pull real engine state (§9)
             te.refresh()
         tes = self.pd_aware(req, tes)
@@ -288,6 +294,12 @@ def round_robin_scheduler(tes: List[TEHandle]):
             state["i"] += 1
             if te.admitting:
                 return te
-        return tes[state["i"] % len(tes)]   # nothing admitting: degrade
+        # nothing admitting: degrade, but never onto a crashed/released TE
+        routable = [t for t in tes
+                    if t.state not in (TEState.FAILED, TEState.RELEASED)]
+        if not routable:
+            raise RuntimeError("round_robin: no routable TE (all failed "
+                               "or released)")
+        return routable[state["i"] % len(routable)]
 
     return pick

@@ -58,6 +58,8 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.abstractions import (Job, RequestType, Status, TaskKind,
                                      UserRequest, decompose)
+from repro.core.faults import (AdmissionRejected, FaultPlan, ForkFault,
+                               TEFailureError, TransferFault, backoff_s)
 from repro.core.fleet import FleetExecutor, TEState
 from repro.core.predictor import TraceEMAPredictor
 from repro.core.scaling import (DrainTrigger, FastScaler, LoadSpreadTrigger,
@@ -144,7 +146,9 @@ class ServingJobEngine:
                  trigger: Optional[LoadSpreadTrigger] = None,
                  drain_trigger: Optional[DrainTrigger] = None,
                  warm_pool: Optional[WarmPool] = None,
-                 fleet_threads: int = 0):
+                 fleet_threads: int = 0,
+                 fault_plan: Optional[FaultPlan] = None,
+                 admission_limit: Optional[int] = None):
         if policy not in ("dist_sched", "round_robin"):
             raise ValueError(f"unknown policy {policy!r}")
         self.bundle = bundle
@@ -180,6 +184,15 @@ class ServingJobEngine:
         self.scale_events: List[Dict[str, Any]] = []
         self.resubmits: List[Dict[str, Any]] = []   # mid-prefill restarts
         self.lifecycle_log: List[Tuple[int, str, str]] = []
+        # fault tolerance (DESIGN.md §11)
+        self.fault_plan = fault_plan            # set BEFORE spawning: the
+        #                                         initial fleet gets hooks
+        self.admission_limit = admission_limit  # queued-per-serving-TE cap
+        self.rejections: List[Dict[str, Any]] = []
+        self._parked: List[Request] = []        # recovered, no survivor yet
+        self._xfer_retry: Dict[str, Tuple[int, int]] = {}  # rid -> (n, due)
+        self.xfer_retries = 0
+        self.xfer_backoff_cap = 8               # max steps between retries
         self.steps = 0
         self.fleet_threads = fleet_threads
         self._fleet: Optional[FleetExecutor] = None
@@ -236,11 +249,25 @@ class ServingJobEngine:
     # ------------------------------------------------------------ fleet
     def _spawn(self, name: str, mode: str) -> FlowServe:
         off, owned = self._alloc_window()
-        ecfg = replace(self._base_ecfg, mode=mode, device_offset=off)
-        te = FlowServe(self.bundle, self.params, ecfg, name=name)
-        self._commit_window(name, off, owned)
+        te = None
+        try:
+            ecfg = replace(self._base_ecfg, mode=mode, device_offset=off)
+            te = FlowServe(self.bundle, self.params, ecfg, name=name)
+            self._commit_window(name, off, owned)
+        finally:
+            if te is None:              # bring-up raised: free the window
+                self._abort_window(off, owned)
+        self._attach_faults(te)
         self.engines.append(te)
         return te
+
+    def _attach_faults(self, te: FlowServe) -> None:
+        """Wire the plane's fault plan into one engine (no-op without one).
+        Every engine the plane creates — initial fleet, trigger forks,
+        scale_to rounds — passes through here so injection covers the
+        WHOLE fleet, not just the seed TEs."""
+        if self.fault_plan is not None:
+            self.fault_plan.attach(te)
 
     def _alloc_window(self) -> Tuple[int, bool]:
         """Disjoint per-TE device windows (DESIGN.md §7/§9) — width tp, or
@@ -275,11 +302,24 @@ class ServingJobEngine:
 
     def _commit_window(self, name: str, off: int, owned: bool) -> None:
         """Bind an allocated window to its now-registered TE (clears the
-        in-flight reservation)."""
+        in-flight reservation). Only an OWNED allocation holds a
+        reservation — discarding unconditionally would clobber another
+        in-flight fork's legitimate claim on offset 0 whenever a fallback
+        (unowned) bring-up commits."""
         with self._window_lock:
-            self._reserved_windows.discard(off)
             if owned:
+                self._reserved_windows.discard(off)
                 self._window_of[name] = off
+
+    def _abort_window(self, off: int, owned: bool) -> None:
+        """Release an in-flight window reservation whose bring-up FAILED
+        (fork raised between alloc and commit). Without this the offset
+        stays reserved forever and the fleet's device footprint shrinks
+        permanently (§11 — the reserved-window leak)."""
+        with self._window_lock:
+            if owned:
+                self._reserved_windows.discard(off)
+                self._free_windows.append(off)
 
     def _bring_up(self, handle: TEHandle) -> None:
         """PROVISIONING → WARMING → SERVING (the §6 pipeline's TE-side
@@ -324,6 +364,7 @@ class ServingJobEngine:
                                   payload={"tokens": list(tokens),
                                            "max_new_tokens":
                                                sampling.max_new_tokens})
+        self._check_admission(request)
         job = decompose(request)[0]
         job.status = Status.RUNNING
         self.jobs[job.job_id] = job
@@ -362,6 +403,34 @@ class ServingJobEngine:
         self.requests[request.req_id] = _PlaneRequest(job, sreq, handle, ereq)
         return request.req_id
 
+    def _check_admission(self, request: UserRequest) -> None:
+        """Graceful degradation (DESIGN.md §11): with ``admission_limit``
+        set, the plane's TOTAL queued-prefill backlog is bounded at
+        ``limit × n_serving`` — capacity lost to failures shrinks the bound
+        automatically (deficit-aware shedding). A breach REJECTS the
+        request explicitly (``Status.REJECTED`` job + ``AdmissionRejected``)
+        instead of building unbounded backlog while ``scale_to`` repairs
+        the fleet."""
+        if self.admission_limit is None:
+            return
+        serving = [h for h in self._handles if h.state is TEState.SERVING]
+        cap = self.admission_limit * len(serving)
+        queued = len(self._parked)
+        for h in serving:
+            for eng in self._members(h):
+                queued += eng.load_metrics()["n_queued"]
+        if serving and queued < cap:
+            return
+        job = decompose(request)[0]
+        job.status = Status.REJECTED
+        self.jobs[job.job_id] = job
+        self.rejections.append({"req_id": request.req_id, "step": self.steps,
+                                "queued": queued, "cap": cap,
+                                "n_serving": len(serving)})
+        raise AdmissionRejected(
+            f"admission shed: {queued} queued >= cap {cap} "
+            f"({len(serving)} serving TEs)", req_id=request.req_id)
+
     # ------------------------------------------------------------ drive
     def step(self) -> List[Completion]:
         """One JE iteration: step every live fleet unit — serially, or as
@@ -372,21 +441,42 @@ class ServingJobEngine:
         units = [h for h in self._handles
                  if h.state in (TEState.SERVING, TEState.DRAINING)]
         out: List[Completion] = []
+        failures: List[Tuple[str, BaseException]] = []
         if self.fleet_threads > 1 and len(units) > 1:
             if self._fleet is None:
                 self._fleet = FleetExecutor(self.fleet_threads)
             for h in units:
                 self._fleet.submit(h.te_id,
                                    (lambda hh=h: self._step_unit(hh)))
-            for _, comps in self._fleet.collect(len(units)):
+            done, failed = self._fleet.collect(len(units))
+            for _, comps in done:
                 out.extend(comps)
+            failures.extend(failed)
         else:
             for h in units:
-                out.extend(self._step_unit(h))
+                try:
+                    out.extend(self._step_unit(h))
+                except Exception as exc:   # same quarantine as the threaded
+                    failures.append((h.te_id, exc))   # path (§11)
         for comp in out:
             self._on_complete(comp)
         self.completions.extend(out)
-        self._pump_drains()
+        # containment AFTER harvesting: the surviving units' completions
+        # this step are real — a failure never nukes them
+        for te_id, exc in failures:
+            self._on_unit_failure(te_id, exc)
+        self._flush_parked()
+        try:
+            self._pump_drains()
+        except TEFailureError as exc:
+            # a source crashed mid-migration on the DRIVER thread (drain
+            # pump) — same quarantine as a worker-thread failure; the
+            # remaining drains pump next step
+            h = next((hh for hh in self._handles
+                      if any(e.name == exc.te
+                             for e in self._members(hh))), None)
+            if h is not None:
+                self._on_unit_failure(h.te_id, exc)
         self._maybe_scale()
         self.steps += 1
         return out
@@ -442,6 +532,9 @@ class ServingJobEngine:
         seq = pe._seqs.get(req_id)
         if seq is None:
             return True                   # released upstream; drop
+        retry = self._xfer_retry.get(req_id)
+        if retry is not None and self.steps < retry[1]:
+            return False                  # backing off a transient fault
         if de.pool is not None:
             # cheap pre-gate; cached (reclaimable) pages count because the
             # import path evicts them coherently through the RTC
@@ -456,6 +549,17 @@ class ServingJobEngine:
             pe.migrate_out(req_id, de)
         except OutOfPagesError:
             return False
+        except TransferFault:
+            # transient wire failure: both endpoints already restored their
+            # state (flowserve rolls back) — retry with capped exponential
+            # backoff, measured in plane steps (§11)
+            attempts = retry[0] + 1 if retry is not None else 1
+            due = self.steps + min(self.xfer_backoff_cap,
+                                   2 ** (attempts - 1))
+            self._xfer_retry[req_id] = (attempts, due)
+            self.xfer_retries += 1
+            return False
+        self._xfer_retry.pop(req_id, None)
         rec = self.requests.get(req_id)
         for task in (rec.job.tasks if rec is not None else ()):
             if task.kind == TaskKind.PREFILL:
@@ -484,6 +588,109 @@ class ServingJobEngine:
             if pred is not None and hasattr(pred, "observe"):
                 # train the EMA predictor on the completed trace (§5.3.3)
                 pred.observe(rec.sreq.tokens, len(comp.tokens))
+
+    # ------------------------------------------------------------ failure
+    def _handle_of_engine(self, eng: FlowServe) -> Optional[TEHandle]:
+        for h in self._handles:
+            if eng in self._members(h):
+                return h
+        return None
+
+    def _on_unit_failure(self, te_id: str, exc: BaseException) -> None:
+        """Detect → contain → recover for one failed fleet unit (§11).
+
+        Containment: the unit walks FAILED → RELEASED, leaves routing
+        (``admitting`` is False the moment it leaves SERVING; the handle
+        is removed from both schedulers' views), and its device windows
+        return to the free list for the repair fork to reuse.
+
+        Recovery keeps the at-most-once invariant by building ONE restart
+        set keyed on req_id, in this order: (1) survivors' in-flight KV
+        imports whose SOURCE died are voided — those sequences restart;
+        (2) requests resident on the dead unit restart UNLESS they are
+        alive on a survivor (a mid-migration request whose import already
+        landed continues on the destination — restarting it too would
+        duplicate tokens); (3) only requests the plane still tracks
+        restart (completed ones are done). Each restart re-enters the
+        least-loaded surviving prefill-capable engine from the PROMPT via
+        ``_resubmit`` (req_id + arrival preserved, restart counted); with
+        no survivor it parks until capacity returns."""
+        handle = next((h for h in self._handles if h.te_id == te_id), None)
+        if handle is None:
+            return                        # already quarantined
+        self._log_state(handle, handle.transition(TEState.FAILED))
+        dead = self._members(handle)
+        dead_names = {e.name for e in dead}
+        restart: Dict[str, Request] = {}
+        for eng in self.engines:
+            if eng in dead:
+                continue
+            for req in eng.void_pending_imports(dead_names):
+                restart[req.req_id] = req
+        alive = set()
+        for eng in self.engines:
+            if eng not in dead:
+                alive.update(eng._requests.keys())
+        for eng in dead:
+            for rid, req in list(eng._requests.items()):
+                if rid not in alive:
+                    restart.setdefault(rid, req)
+        restart = {rid: req for rid, req in restart.items()
+                   if rid in self.requests}
+        # quarantine: windows to the free list, engines/handle out of every
+        # routing structure (a FAILED unit is replaced, not rebooted here —
+        # scale_to repairs the fleet from survivors)
+        self._log_state(handle, handle.transition(TEState.RELEASED))
+        for eng in dead:
+            with self._window_lock:
+                off = self._window_of.pop(eng.name, None)
+                if off is not None:
+                    self._free_windows.append(off)
+            if eng in self.engines:
+                self.engines.remove(eng)
+        self._handles.remove(handle)      # shared list: RR sees the removal
+        self.scheduler.tes.pop(handle.te_id, None)
+        self._migrate_pending.pop(handle.te_id, None)
+        for rid in restart:
+            self._xfer_retry.pop(rid, None)
+        self.scale_events.append({"kind": "te_failure", "step": self.steps,
+                                  "te_id": te_id, "error": repr(exc),
+                                  "n_restarted": len(restart),
+                                  "event": None})
+        if self.drain_trigger is not None:
+            self.drain_trigger.rearm()    # capacity loss: never keep draining
+        if self.trigger is not None:
+            # the lost capacity must be able to re-fire scale-out
+            # immediately, whatever the trigger's re-arm state was
+            self.trigger.armed = True
+            self.trigger.breach_steps = 0
+        for rid, req in restart.items():
+            dst = self._resubmit_destination(exclude=handle)
+            if dst is None:
+                self._parked.append(req)
+                continue
+            self._resubmit(req, dst, src=te_id, reason="te_failure")
+
+    def _flush_parked(self) -> None:
+        """Re-home requests whose failure-time restart found no surviving
+        admitting engine (total capacity loss) once repair restores one."""
+        if not self._parked:
+            return
+        parked, self._parked = self._parked, []
+        for req in parked:
+            dst = self._resubmit_destination(exclude=None)
+            if dst is None:
+                self._parked.append(req)
+            else:
+                self._resubmit(req, dst, src="parked", reason="te_failure")
+
+    def restart_counts(self) -> Dict[str, int]:
+        """Per-request restart tally over the whole run (at-most-once
+        accounting input for the fault bench)."""
+        counts: Dict[str, int] = {}
+        for r in self.resubmits:
+            counts[r["req_id"]] = counts.get(r["req_id"], 0) + 1
+        return counts
 
     # ------------------------------------------------------------ scale-in
     def drain(self, te_id: str) -> TEHandle:
@@ -570,12 +777,13 @@ class ServingJobEngine:
                 best, best_load = eng, load
         return best
 
-    def _resubmit(self, req: Request, dst: FlowServe, src: str) -> None:
-        """Token-level restart of a mid-PREFILL request on ``dst``: the
-        original ``Request`` (req_id + external arrival preserved, so TTFT
-        spans the restart) re-enters the destination's scheduler from the
-        prompt. Recorded in ``resubmits``, NOT ``scale_events`` — it's
-        request routing, not fleet shape."""
+    def _resubmit(self, req: Request, dst: FlowServe, src: str,
+                  reason: str = "drain") -> None:
+        """Token-level restart of a mid-PREFILL (or failure-recovered)
+        request on ``dst``: the original ``Request`` (req_id + external
+        arrival preserved, so TTFT spans the restart) re-enters the
+        destination's scheduler from the prompt. Recorded in ``resubmits``,
+        NOT ``scale_events`` — it's request routing, not fleet shape."""
         dst.add_request(req)
         rec = self.requests.get(req.req_id)
         if rec is not None:
@@ -583,7 +791,8 @@ class ServingJobEngine:
                 if task.kind in (TaskKind.PREFILL, TaskKind.COLOCATED):
                     task.te_id, task.status = dst.name, Status.RUNNING
         self.resubmits.append({"req_id": req.req_id, "from": src,
-                               "to": dst.name, "step": self.steps})
+                               "to": dst.name, "step": self.steps,
+                               "reason": reason})
 
     def _members(self, handle: TEHandle) -> List[FlowServe]:
         if handle.te_type == "pd_pair":
@@ -683,12 +892,21 @@ class ServingJobEngine:
         victim = min(cands, key=lambda h: h.load)
         self.drain(victim.te_id)
 
+    fork_max_attempts: int = 4          # per-fork retry budget (§11)
+
     def _scale_out(self) -> None:
         """Spread breach: NPU-fork capacity from a live engine (§6.3).
         Decode-dominated pressure with a PD group present grows that
         group's decode side (M:N, §4.6); anything else forks a whole
         colocated TE. FastScaler prices the 5-step bring-up pipeline
-        around the same fork."""
+        around the same fork.
+
+        Fault handling (§11): a transient ``ForkFault`` retries with
+        capped exponential backoff, rotating to an ALTERNATIVE source; a
+        source that dies mid-fork (``TEFailureError``) is quarantined via
+        ``_on_unit_failure`` and the retry continues from a survivor. The
+        window reservation is released in a ``finally`` whenever no TE
+        registers — a failed fork must not leak the offset."""
         live = [h for h in self._handles if h.admitting]
         pd_handles = [h for h in live if h.te_type == "pd_pair"]
         total_p = sum(h.prefill_load for h in live)
@@ -697,22 +915,54 @@ class ServingJobEngine:
                       and total_d > self.decode_dominance * max(1.0, total_p))
         if grow_group:
             group = max(pd_handles, key=lambda h: h.decode_load)
-            src_engine = min(group.decode_members(), key=_engine_load)
+            candidates = sorted(group.decode_members(), key=_engine_load)
             name = f"{group.te_id}-d{len(group.decode_members())}"
             mode = "decode"
         else:
             group = None
-            src_handle = min(live, key=lambda h: h.load)
-            src_engine = src_handle.decode_engine or src_handle.engine
+            candidates = sorted((h.decode_engine or h.engine for h in live),
+                                key=_engine_load)
             name = f"te-scale{self._scale_seq}"
             mode = "colocated"
         off, owned = self._alloc_window()
-        ecfg = replace(self._base_ecfg, mode=mode, device_offset=off)
+        te = src_engine = None
+        try:
+            ecfg = replace(self._base_ecfg, mode=mode, device_offset=off)
+            for attempt in range(self.fork_max_attempts):
+                if not candidates:
+                    break
+                src_engine = candidates[attempt % len(candidates)]
+                try:
+                    te = FlowServe.fork_from(src_engine, ecfg, name=name)
+                    break
+                except ForkFault:
+                    time.sleep(backoff_s(attempt))
+                except TEFailureError as exc:
+                    src_handle = self._handle_of_engine(src_engine)
+                    dead = set(self._members(src_handle)) \
+                        if src_handle is not None else {src_engine}
+                    if src_handle is not None:
+                        self._on_unit_failure(src_handle.te_id, exc)
+                    candidates = [c for c in candidates
+                                  if c not in dead and c.fork_ready]
+                    if group is not None and not candidates:
+                        break   # the group's own decode side is gone
+            if te is not None:
+                self._commit_window(name, off, owned)
+        finally:
+            if te is None:
+                self._abort_window(off, owned)
+        if te is None:
+            self.scale_events.append({"kind": "fork_failed",
+                                      "step": self.steps, "te_id": name,
+                                      "event": None})
+            if self.trigger is not None:
+                self.trigger.armed = True   # deficit persists: re-fire
+            return
+        self._attach_faults(te)
         # the new TE walks the same lifecycle as the initial fleet
         handle = (group if group is not None else
                   TEHandle(name, "colocated", state=TEState.PROVISIONING))
-        te = FlowServe.fork_from(src_engine, ecfg, name=name)
-        self._commit_window(name, off, owned)
         if group is None:
             self._scale_seq += 1
         for eng in self.engines:
@@ -799,8 +1049,11 @@ class ServingJobEngine:
             "rounds": [], "tiers": {"fork": 0, "warm": 0, "cold": 0}}
         t_all = time.monotonic()
         asset = self._asset_name()
-        warm_params = self.warm_pool.get(asset) \
+        # tag asserts the entry's model-asset identity (§11): a mispointed
+        # pool entry fails loudly here, not as a TE serving wrong weights
+        warm_params = self.warm_pool.get(asset, tag=asset) \
             if self.warm_pool is not None else None
+        stalls = 0                      # consecutive zero-progress rounds
         while self.n_serving() < n:
             deficit = n - self.n_serving()
             sources = self._fork_sources()
@@ -832,15 +1085,39 @@ class ServingJobEngine:
                                                 warm_params, warmup,
                                                 pace_s=pace_s)))
             t_round = time.monotonic()
+            failed: Dict[str, BaseException] = {}
             if len(jobs) > 1:
                 pool = self._fork_executor()
                 for name, _, _, _, _, fn in jobs:
                     pool.submit(name, fn)
-                done = dict(pool.collect(len(jobs)))
+                done_list, failed_list = pool.collect(len(jobs))
+                done = dict(done_list)
+                failed = dict(failed_list)
             else:
-                done = {name: fn() for name, _, _, _, _, fn in jobs}
+                done = {}
+                for name, _, _, _, _, fn in jobs:
+                    try:
+                        done[name] = fn()
+                    except Exception as exc:
+                        failed[name] = exc
             round_tes = []
             for name, off, owned, tier, src_name, _ in jobs:
+                if name not in done:
+                    # bring-up failed (transient ForkFault retries next
+                    # round from the recomputed deficit): free the window
+                    # reservation, and if the SOURCE died mid-fork,
+                    # quarantine it before the next round forks from it
+                    self._abort_window(off, owned)
+                    exc = failed.get(name)
+                    dead_te = getattr(exc, "te", None)
+                    if dead_te is not None:
+                        src_handle = next(
+                            (h for h in self._handles
+                             if any(e.name == dead_te
+                                    for e in self._members(h))), None)
+                        if src_handle is not None:
+                            self._on_unit_failure(src_handle.te_id, exc)
+                    continue
                 te, fork_s = done[name]
                 self._register_scaled(te, off, owned, tier, src_name,
                                       fork_s, len(plan["rounds"]))
@@ -848,8 +1125,19 @@ class ServingJobEngine:
                 round_tes.append(name)
             plan["rounds"].append({
                 "round": len(plan["rounds"]), "tes": round_tes,
+                "failed": sorted(failed),
                 "sources": [j[4] for j in jobs if j[4] is not None],
                 "wall_s": time.monotonic() - t_round})
+            if round_tes:
+                stalls = 0
+            else:
+                stalls += 1
+                if stalls >= 4:
+                    raise RuntimeError(
+                        f"scale_to({n}) stalled: {stalls} consecutive "
+                        f"rounds with no successful bring-up "
+                        f"(last errors: {sorted(map(repr, failed.values()))})")
+                time.sleep(backoff_s(stalls))
         plan["wall_s"] = time.monotonic() - t_all
         plan["n_serving"] = self.n_serving()
         return plan
@@ -888,6 +1176,7 @@ class ServingJobEngine:
         window, link it into the fleet's DistFlow peer group, walk the
         lifecycle to SERVING, and expose it to Algorithm 1."""
         self._commit_window(te.name, off, owned)
+        self._attach_faults(te)
         for eng in self.engines:
             eng.distflow.link_cluster([te.distflow])
         self.engines.append(te)

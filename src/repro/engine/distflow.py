@@ -47,6 +47,14 @@ BACKENDS = {
 _xfer_ids = itertools.count()
 
 
+class TransferFault(RuntimeError):
+    """Transient wire failure: the transfer did NOT happen (no bytes
+    charged, nothing delivered). Callers retry with backoff; the migration
+    pump restores both endpoints' request state first (core/faults.py).
+    Defined here — not in ``repro.core.faults`` — because the engine layer
+    cannot import ``repro.core`` (circular import via core/__init__)."""
+
+
 @dataclass
 class BufferInfo:
     """src/dst descriptor: owner engine id, memory tier, opaque buffer."""
@@ -84,6 +92,8 @@ class MigrationHandle:
     xfer: Transfer
     chunks: List[Tuple[int, Any, Any]]
     landed: List[bool] = None   # per-chunk ready events
+    src_owner: str = ""         # endpoints, for voiding on endpoint death
+    dst_owner: str = ""
 
     def __post_init__(self):
         if self.landed is None:
@@ -149,6 +159,9 @@ class DistFlow:
         self.peers: Dict[str, "DistFlow"] = {}
         self.log: List[Transfer] = []
         self.sim_clock = 0.0
+        # fault-injection hook (src_owner, dst_owner, n_bytes) -> None,
+        # raising TransferFault BEFORE any bytes move (core/faults.py)
+        self.fault_hook: Optional[Callable[[str, str, int], None]] = None
 
     # -------------------------------------------------------- control
     def link_cluster(self, peers: List["DistFlow"]) -> None:
@@ -186,6 +199,8 @@ class DistFlow:
         """Synchronous-completion transfer of src.payload to dst.deliver.
         Charges simulated time by backend bandwidth/latency."""
         backend = backend or self._pick_backend(src, dst)
+        if self.fault_hook is not None:
+            self.fault_hook(src.owner, dst.owner, _nbytes(src.payload))
         t0 = time.monotonic()
         payload = src.payload
         if dst.deliver is not None:
@@ -235,6 +250,8 @@ class DistFlow:
         """
         import jax
         backend = backend or self.default_backend
+        if self.fault_hook is not None:
+            self.fault_hook(self.owner, dst_owner, _nbytes([kv["k"], kv["v"]]))
         t0 = time.monotonic()
         k, v = kv["k"], kv["v"]
         n_layers = int(k.shape[0])
@@ -251,7 +268,8 @@ class DistFlow:
         xfer = self.charge(_nbytes([k, v]), backend, links=links,
                            peer_owners=(dst_owner,),
                            wall=time.monotonic() - t0, done=False)
-        return MigrationHandle(xfer=xfer, chunks=chunks)
+        return MigrationHandle(xfer=xfer, chunks=chunks,
+                               src_owner=self.owner, dst_owner=dst_owner)
 
     def _pick_backend(self, src: BufferInfo, dst: BufferInfo) -> str:
         if src.tier == "dram" and dst.tier == "npu":

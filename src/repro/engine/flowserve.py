@@ -23,7 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.engine.distflow import BufferInfo, DistFlow, _nbytes
+from repro.engine.distflow import (BufferInfo, DistFlow, TransferFault,
+                                   _nbytes)
 from repro.engine.hotloop import DecodeHotState, pow2s
 from repro.engine.kv_cache import OutOfPagesError, PagedKVPool, pages_needed
 from repro.engine.model_runner import (PagedRunner, SequenceState, SlotRunner,
@@ -114,6 +115,7 @@ class FlowServe:
         self.runner_kind = pick_runner(self.cfg)
         self.tokenizer = ByteTokenizer(max(self.cfg.vocab_size, 259))
         self.distflow = DistFlow(owner=name)
+        self.fault_plan = None           # set by FaultPlan.attach (§11)
         self._key = jax.random.PRNGKey(ecfg.seed)
 
         # SPMD executor mesh: the TE's NPUs form a pure TP group (tp=1 keeps
@@ -202,6 +204,8 @@ class FlowServe:
         into the source's peer group."""
         from repro.core.scaling import npu_fork_live
         from repro.launch.mesh import make_engine_mesh
+        if getattr(source, "fault_plan", None) is not None:
+            source.fault_plan.on_fork(source)
         dst_mesh = make_engine_mesh(ecfg.tp, offset=ecfg.device_offset) \
             if ecfg.tp > 1 else None
         with source._lock:   # executor-safe vs a fleet worker stepping src
@@ -224,7 +228,28 @@ class FlowServe:
         concurrently. tp>1 TEs shard through the constructor's mesh path;
         tp=1 TEs are explicitly homed here (the constructor only pins when
         ``device_offset > 0``, but warm params must land on-device even in
-        window 0 or every dispatch would re-upload them)."""
+        window 0 or every dispatch would re-upload them).
+
+        Entry integrity (DESIGN.md §11): the pool stores arbitrary pytrees
+        keyed by name — a stale/mispointed entry would silently build a TE
+        from the WRONG weights. Validate the entry's tree structure and
+        leaf shapes against ``bundle`` before committing any device memory;
+        mismatch raises ``WarmPoolMismatchError``."""
+        from repro.core.scaling import WarmPoolMismatchError
+        expected = jax.eval_shape(
+            lambda k: bundle.init_params(k, jnp.float32),
+            jax.random.PRNGKey(0))
+        exp_tree = jax.tree_util.tree_structure(expected)
+        got_tree = jax.tree_util.tree_structure(host_params)
+        exp_shapes = [tuple(l.shape) for l in jax.tree_util.tree_leaves(expected)]
+        got_shapes = [tuple(np.shape(l)) for l in
+                      jax.tree_util.tree_leaves(host_params)]
+        if exp_tree != got_tree or exp_shapes != got_shapes:
+            raise WarmPoolMismatchError(
+                f"warm-pool entry does not match model "
+                f"{getattr(bundle.cfg, 'name', '?')!r} for TE {name}: "
+                f"tree/shape mismatch (expected {len(exp_shapes)} leaves, "
+                f"got {len(got_shapes)})")
         if ecfg.tp <= 1:
             dev = jax.devices()[ecfg.device_offset % jax.device_count()]
             host_params = jax.device_put(host_params, dev)
@@ -305,6 +330,8 @@ class FlowServe:
         horizon later, so completions surface with at most one extra step
         of latency (DESIGN.md §8)."""
         t0 = time.monotonic()
+        if self.fault_plan is not None:
+            self.fault_plan.on_step(self)
         self.scheduler.resolve_prefix()
         self.scheduler.pump_prefetch()
         plan = self._next_plan if (self.ecfg.async_sched and self._next_plan) \
@@ -672,31 +699,49 @@ class FlowServe:
         # release_request below frees pages/slots but doesn't touch queue
         # membership (finishing seqs already left via on_finished), and a
         # zombie in `running` would keep this TE's has_work true forever
-        self.scheduler.remove(self._seqs[req_id])
+        seq = self._seqs[req_id]
+        was_running = seq in self.scheduler.running
+        self.scheduler.remove(seq)
         payload = self.export_kv(req_id, host_gather=host_gather)
-        if self.runner_kind != "paged" or host_gather:
-            if host_gather and self.runner_kind == "paged":
-                # the v1 path is a genuine host round-trip: price the DtoH
-                # gather (here) and the HtoD pool rewrite (on dst) that the
-                # device-resident path never pays
-                n_kv = _nbytes([payload["k"], payload["v"]])
-                self.distflow.charge(n_kv, "pcie_dram")
-            self.distflow.transfer(
-                BufferInfo(owner=self.name, tier="npu", payload=payload),
-                BufferInfo(owner=dst.name, tier="npu",
-                           deliver=dst.import_request))
-            if host_gather and self.runner_kind == "paged":
-                dst.distflow.charge(n_kv, "pcie_dram")
-        else:
-            kv = {"k": payload.pop("k"), "v": payload.pop("v")}
-            handle = self.distflow.transfer_sharded(
-                kv, dst.name, dst_sharding=dst.pool.run_sharding(),
-                src_tp=self.ecfg.tp, dst_tp=dst.ecfg.tp,
-                layer_chunks=layer_chunks)
-            payload["kv_handle"] = handle
-            dst.import_request(payload)
-            if not overlap:
-                dst.finish_pending_imports()
+        try:
+            if self.runner_kind != "paged" or host_gather:
+                if host_gather and self.runner_kind == "paged":
+                    # the v1 path is a genuine host round-trip: price the DtoH
+                    # gather (here) and the HtoD pool rewrite (on dst) that the
+                    # device-resident path never pays
+                    n_kv = _nbytes([payload["k"], payload["v"]])
+                    self.distflow.charge(n_kv, "pcie_dram")
+                self.distflow.transfer(
+                    BufferInfo(owner=self.name, tier="npu", payload=payload),
+                    BufferInfo(owner=dst.name, tier="npu",
+                               deliver=dst.import_request))
+                if host_gather and self.runner_kind == "paged":
+                    dst.distflow.charge(n_kv, "pcie_dram")
+            else:
+                kv = {"k": payload.pop("k"), "v": payload.pop("v")}
+                handle = self.distflow.transfer_sharded(
+                    kv, dst.name, dst_sharding=dst.pool.run_sharding(),
+                    src_tp=self.ecfg.tp, dst_tp=dst.ecfg.tp,
+                    layer_chunks=layer_chunks)
+                payload["kv_handle"] = handle
+                dst.import_request(payload)
+                if not overlap:
+                    dst.finish_pending_imports()
+        except (TransferFault, OutOfPagesError):
+            # the migration did not land: a TransferFault fires BEFORE any
+            # delivery and an OutOfPagesError rolls the destination back
+            # before committing state — either way the destination is
+            # untouched, so restore this TE's authoritative state (the seq
+            # left the run queue above) and let the pump retry/backoff
+            # (DESIGN.md §11) instead of stranding a zombie sequence
+            if was_running and req_id in self._seqs:
+                self.scheduler.admit_running(seq)
+            raise
+        # injected source crash mid-migration: the destination already
+        # imported (the sequence continues there), but this TE dies before
+        # acking/cleaning up — recovery must dedupe against the survivor
+        if self.fault_plan is not None:
+            self.fault_plan.on_migration(self, dst.name)
         # keep_prefix=True preserves the prefill prefix in this TE's RTC so
         # later shared-prefix requests skip the recompute (§4.3)
         self.release_request(req_id, keep_prefix=keep_prefix)
@@ -710,6 +755,28 @@ class FlowServe:
             handle = seq.extra.pop("_kv_pending", None)
             if handle is not None:
                 self._import_layerwise(handle, seq)
+
+    @_executor_safe
+    def void_pending_imports(self, dead_owners) -> List[Request]:
+        """Recovery (DESIGN.md §11): void every in-flight KV import whose
+        SOURCE endpoint died. The chunks may reference the dead TE's pool
+        arrays, so they are never scattered — the sequence's local state is
+        released and its original ``Request`` returned for a prompt-level
+        restart on a survivor. Idempotent per sequence (the handle is
+        popped), which is what makes recovery dedupe-safe."""
+        out: List[Request] = []
+        for seq in list(self._seqs.values()):
+            handle = seq.extra.get("_kv_pending")
+            if handle is None \
+                    or getattr(handle, "src_owner", None) not in dead_owners:
+                continue
+            seq.extra.pop("_kv_pending", None)
+            req = self._requests.get(seq.seq_id)
+            self.scheduler.remove(seq)
+            self.release_request(seq.seq_id, keep_prefix=False)
+            if req is not None:
+                out.append(req)
+        return out
 
     @_executor_safe
     def release_request(self, req_id: str, keep_prefix: bool = True) -> None:

@@ -119,25 +119,34 @@ def test_fleet_executor_submit_collect_and_pinning():
     for rep in range(3):
         for unit in ("a", "b", "c"):      # 3 units share 2 workers
             ex.submit(unit, (lambda u=unit, r=rep: work(u, r)))
-        got = sorted(ex.collect(3))
+        done, failed = ex.collect(3)
+        assert failed == []
+        got = sorted(done)
         assert got == [("a", ("a", rep)), ("b", ("b", rep)),
                        ("c", ("c", rep))]
     assert all(len(threads) == 1 for threads in log.values())
     ex.close()
 
 
-def test_fleet_executor_propagates_exceptions_after_collecting_all():
+def test_fleet_executor_quarantines_failures_and_returns_survivors():
+    """Regression (§11): one failing unit no longer aborts the other
+    units' step — collect() never raises; survivors' results surface and
+    the failure is reported alongside, for the caller to quarantine."""
     ex = FleetExecutor(2)
-    done = []
+    ran = []
 
     def boom():
         raise RuntimeError("unit exploded")
 
-    ex.submit("ok", lambda: done.append(1) or "fine")
+    ex.submit("ok", lambda: ran.append(1) or "fine")
     ex.submit("bad", boom)
-    with pytest.raises(RuntimeError, match="unit exploded"):
-        ex.collect(2)
-    assert done == [1]                    # the healthy unit still ran
+    done, failed = ex.collect(2)
+    assert done == [("ok", "fine")]       # the survivor's result returned
+    assert ran == [1]                     # and its work genuinely ran
+    assert len(failed) == 1
+    tag, exc = failed[0]
+    assert tag == "bad"
+    assert isinstance(exc, RuntimeError) and "unit exploded" in str(exc)
     ex.close()
 
 

@@ -5,7 +5,7 @@
 PYTEST   := PYTHONPATH=src python -m pytest
 XLA_HOST := XLA_FLAGS="--xla_force_host_platform_device_count=8"
 
-.PHONY: tier1 fast test-fleet test-faults bench-tp bench-pd bench-hotloop bench-serving bench-scaleout bench-faults bench help
+.PHONY: tier1 fast test-fleet test-faults bench-tp bench-pd bench-hotloop bench-prefill bench-serving bench-scaleout bench-faults bench help
 
 tier1:  ## full tier-1 suite (ROADMAP.md verify command) on 8 simulated devices
 	$(XLA_HOST) $(PYTEST) -x -q
@@ -21,6 +21,9 @@ bench-pd:  ## PD KV-migration: host-gather v1 vs sharded device path at tp in {1
 
 bench-hotloop:  ## decode hot loop: v1 host-driven vs v2 fused/multi-step at tp in {1,2,4}
 	PYTHONPATH=src python benchmarks/bench_decode_hotloop.py
+
+bench-prefill:  ## batched ragged prefill: legacy per-seq vs one-dispatch at tp in {1,2} (--json -> BENCH_prefill_batching.json)
+	$(XLA_HOST) PYTHONPATH=src python -m benchmarks.run --only prefill_batching --json
 
 FLEET_THREADS ?= 4
 

@@ -1,0 +1,186 @@
+"""Batched ragged prefill benchmark (DESIGN.md §12).
+
+legacy  — per-sequence prefill: one batch-1 dispatch per sequence per
+          chunk, jit-keyed on the raw (chunk_len, n_pages) pair, first
+          token sampled by the decode path.
+batched — one-dispatch ragged prefill: the whole step's prefill plan in
+          ONE padded pow2-bucketed dispatch (flat token stream, single KV
+          scatter per layer, chunk-final logits, first token sampled
+          in-dispatch).
+
+Workload is many concurrent prompts / short decode so prefill dispatch
+overhead dominates the wall (the regime the paper's host-dispatch budget
+targets: a step's prefill plan spans many sequences).
+Reports, per TP ∈ {1,2}: prompt tok/s, prefill dispatches per prompt
+token (→ 1/step-budget), prefill recompiles in the timed pass (→ 0 after
+warmup), TTFT p90, and greedy-token parity legacy vs batched.
+
+    PYTHONPATH=src python benchmarks/bench_prefill_batching.py
+        [--arch qwen3-8b] [--tp 1,2] [--requests 16] [--prompt-len 21]
+        [--max-new 4]
+
+Also exposes run() -> CSV rows for benchmarks/run.py.
+"""
+from __future__ import annotations
+
+import os
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = \
+        (_flags + " --xla_force_host_platform_device_count=8").strip()
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine import EngineConfig, FlowServe, Request, SamplingParams
+from repro.models import get_model
+
+
+def _prompts(n: int, length: int, seed0: int) -> list:
+    # ragged on purpose: lengths stagger ±25% around the nominal so the
+    # batched path's padding/bucketing is exercised, not a uniform batch
+    out = []
+    for i in range(n):
+        rs = np.random.RandomState(seed0 + i)
+        ln = max(2, length + int(rs.randint(-length // 4, length // 4 + 1)))
+        out.append([1] + [int(x) for x in rs.randint(3, 200, ln)])
+    return out
+
+
+def _serve(te: FlowServe, prompts: list, max_new: int):
+    sp = SamplingParams(temperature=0.0, max_new_tokens=max_new,
+                        stop_on_eos=False)
+    for i, p in enumerate(prompts):
+        te.add_request(Request(prompt_tokens=p, sampling=sp, req_id=f"q{i}"))
+    comps = te.run_to_completion()
+    return ({c.req_id: c.tokens for c in comps},
+            sorted(c.ttft for c in comps))
+
+
+def _warm_engine(arch: str, tp: int, n_requests: int, prompt_len: int,
+                 max_new: int, batched: bool) -> FlowServe:
+    bundle = get_model(arch, smoke=True)
+    params = bundle.init_params(jax.random.PRNGKey(0), jnp.float32)
+    ecfg = EngineConfig(tp=tp, n_pages=256, page_size=8, max_batch_tokens=64,
+                        chunk_size=8, max_decode_batch=8, max_prefill_seqs=16,
+                        enable_prefix_cache=False, batched_prefill=batched)
+    te = FlowServe(bundle, params, ecfg)
+    # warmup serve passes until the jit set stabilizes (cheaper than
+    # te.warmup_prefill()'s full bucket grid, which exists for cold-start
+    # production bring-up)
+    for w in range(4):
+        c0 = te.prefill_jit_compiles + te.jit_compiles
+        _serve(te, _prompts(n_requests, prompt_len, seed0=10 * w), max_new)
+        if te.prefill_jit_compiles + te.jit_compiles == c0:
+            break
+    return te
+
+
+def _timed_pass(te: FlowServe, tp: int, batched: bool, n_requests: int,
+                prompt_len: int, max_new: int) -> dict:
+    prompts = _prompts(n_requests, prompt_len, seed0=100)
+    d0 = dict(pdisp=te.prefill_dispatches, psyncs=te.prefill_syncs,
+              pcompiles=te.prefill_jit_compiles)
+    t0 = time.monotonic()
+    tokens, ttfts = _serve(te, prompts, max_new)
+    dt = time.monotonic() - t0
+    n_prompt = sum(len(p) for p in prompts)
+    return {
+        "tp": tp, "batched": batched,
+        "prompt_tok_s": n_prompt / dt, "wall_s": dt,
+        "prefill_dispatches": te.prefill_dispatches - d0["pdisp"],
+        "disp_per_prompt_tok": (te.prefill_dispatches - d0["pdisp"])
+        / max(n_prompt, 1),
+        "prefill_syncs": te.prefill_syncs - d0["psyncs"],
+        "recompiles": te.prefill_jit_compiles - d0["pcompiles"],
+        "ttft_p90": ttfts[int(0.9 * (len(ttfts) - 1))],
+        "tokens": tokens,
+    }
+
+
+def bench_pair(arch: str, tp: int, n_requests: int, prompt_len: int,
+               max_new: int, reps: int = 3) -> dict:
+    """legacy vs batched with INTERLEAVED best-of-N timed passes: one pass
+    is well under a second of wall on smoke models, so background load
+    would otherwise bias whichever variant it happened to land on."""
+    te1 = _warm_engine(arch, tp, n_requests, prompt_len, max_new, False)
+    te2 = _warm_engine(arch, tp, n_requests, prompt_len, max_new, True)
+    v1 = v2 = None
+    for _ in range(reps):
+        r1 = _timed_pass(te1, tp, False, n_requests, prompt_len, max_new)
+        r2 = _timed_pass(te2, tp, True, n_requests, prompt_len, max_new)
+        if v1 is None or r1["prompt_tok_s"] > v1["prompt_tok_s"]:
+            v1 = r1
+        if v2 is None or r2["prompt_tok_s"] > v2["prompt_tok_s"]:
+            v2 = r2
+    return {"legacy": v1, "batched": v2, "tp": tp,
+            "parity": v1["tokens"] == v2["tokens"],
+            "speedup": v2["prompt_tok_s"] / max(v1["prompt_tok_s"], 1e-9),
+            "ttft_p90_ratio": v1["ttft_p90"] / max(v2["ttft_p90"], 1e-9)}
+
+
+def run() -> list:
+    """CSV rows for benchmarks/run.py: (name, value, derived)."""
+    rows = []
+    for tp in (1, 2):
+        if tp > jax.device_count():
+            rows.append((f"prefill_batching_tp{tp}_SKIPPED", 0.0,
+                         f"only {jax.device_count()} devices; run via "
+                         "`make bench` or set XLA_FLAGS"))
+            continue
+        r = bench_pair("qwen3-8b", tp, n_requests=16, prompt_len=21, max_new=4)
+        v1, v2 = r["legacy"], r["batched"]
+        rows.append((f"prefill_batching_tp{tp}_legacy_tok_s",
+                     v1["prompt_tok_s"],
+                     f"disp/ptok={v1['disp_per_prompt_tok']:.3f} "
+                     f"recompiles={v1['recompiles']} "
+                     f"ttft_p90={v1['ttft_p90'] * 1e3:.1f}ms"))
+        rows.append((f"prefill_batching_tp{tp}_batched_tok_s",
+                     v2["prompt_tok_s"],
+                     f"disp/ptok={v2['disp_per_prompt_tok']:.3f} "
+                     f"recompiles={v2['recompiles']} "
+                     f"ttft_p90={v2['ttft_p90'] * 1e3:.1f}ms "
+                     f"speedup={r['speedup']:.2f}x "
+                     f"ttft_p90_gain={r['ttft_p90_ratio']:.2f}x "
+                     f"greedy_parity={r['parity']}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--tp", default="1,2")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=21)
+    ap.add_argument("--max-new", type=int, default=4)
+    args = ap.parse_args()
+
+    print(f"devices={jax.device_count()} arch={args.arch}-smoke "
+          f"requests={args.requests} prompt_len~{args.prompt_len} "
+          f"max_new={args.max_new}")
+    print(f"{'tp':>4} {'path':>8} {'ptok/s':>10} {'disp/ptok':>10} "
+          f"{'recompiles':>11} {'ttft_p90':>10} {'parity':>7} {'speedup':>8}")
+    for tp_s in args.tp.split(","):
+        tp = int(tp_s)
+        if tp > jax.device_count():
+            print(f"{tp:>4} skipped: only {jax.device_count()} devices")
+            continue
+        r = bench_pair(args.arch, tp, args.requests, args.prompt_len,
+                       args.max_new)
+        for tag in ("legacy", "batched"):
+            v = r[tag]
+            extra = f"{r['parity']!s:>7} {r['speedup']:>7.2f}x" \
+                if tag == "batched" else f"{'-':>7} {'-':>8}"
+            print(f"{tp:>4} {tag:>8} {v['prompt_tok_s']:>10.1f} "
+                  f"{v['disp_per_prompt_tok']:>10.3f} "
+                  f"{v['recompiles']:>11d} "
+                  f"{v['ttft_p90'] * 1e3:>8.1f}ms {extra}")
+
+
+if __name__ == "__main__":
+    main()

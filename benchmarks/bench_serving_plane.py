@@ -209,10 +209,19 @@ def bench(n: int = 9, rps: float = 1.5, max_wall: float = 150.0,
         results[mix] = {"ref": _metrics(ref_done, ref_wall, slo)}
         for pol, je in planes.items():
             d0 = dict(je.scheduler.decisions)
+            p0 = sum(e.prefill_dispatches for e in je.engines)
+            h0 = sum(e.host_dispatches for e in je.engines)
             done, wall = drive(je, mix, n, rps, max_wall, seed=7)
             m = _metrics(done, wall, slo)
             m["decisions"] = {k: je.scheduler.decisions[k] - d0[k]
                               for k in d0}
+            # fleet-wide dispatch split (§12): with batched_prefill the
+            # prefill side of a mix collapses to ~1 dispatch per step
+            # regardless of how many prompts the step's plan packs
+            m["prefill_dispatches"] = (
+                sum(e.prefill_dispatches for e in je.engines) - p0)
+            m["decode_dispatches"] = (
+                sum(e.host_dispatches for e in je.engines) - h0)
             m["parity"] = (len(done) == len(ref_done)
                            and all(list(done[k].tokens) == ref_toks[k]
                                    for k in ref_toks))
@@ -355,6 +364,8 @@ def run() -> list:
                 f"@slo{m['slo_ttft_ms']:.0f}ms;"
                 f"tok_s={m['tok_s']:.1f};n={m['n']};"
                 f"parity={m['parity']};"
+                f"dispatches=prefill:{m['prefill_dispatches']}"
+                f"/decode:{m['decode_dispatches']};"
                 f"decisions=disagg:{dec['pd_disagg']}/colo:{dec['pd_colo']}"
                 f"/loc:{dec['locality']}/load:{dec['load']}"))
         ds, rr = by_pol["dist_sched"], by_pol["round_robin"]
@@ -411,6 +422,9 @@ def main() -> None:
             dec_s = (f"disagg:{dec['pd_disagg']} colo:{dec['pd_colo']} "
                      f"loc:{dec['locality']} load:{dec['load']}"
                      if dec else "-")
+            if "prefill_dispatches" in m:
+                dec_s += (f"  disp=p:{m['prefill_dispatches']}"
+                          f"/d:{m['decode_dispatches']}")
             print(f"{mix:>14} {pol:>12} {m['n']:>3} "
                   f"{m['ttft_mean_ms']:>6.0f}ms {m['ttft_p90_ms']:>6.0f}ms "
                   f"{m['tpot_ms']:>5.1f}ms {m['goodput_rps']:>8.2f} "

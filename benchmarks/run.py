@@ -29,6 +29,7 @@ MODULES = [
     ("tp_engine", "benchmarks.bench_tp_engine"),
     ("pd_migration", "benchmarks.bench_pd_migration"),
     ("decode_hotloop", "benchmarks.bench_decode_hotloop"),
+    ("prefill_batching", "benchmarks.bench_prefill_batching"),
     ("serving_plane", "benchmarks.bench_serving_plane"),
     ("scale_out", "benchmarks.bench_scale_out"),
     ("fault_recovery", "benchmarks.bench_fault_recovery"),

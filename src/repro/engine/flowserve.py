@@ -25,10 +25,9 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.engine.distflow import (BufferInfo, DistFlow, TransferFault,
                                    _nbytes)
-from repro.engine.hotloop import DecodeHotState, pow2s
+from repro.engine.hotloop import DecodeHotState, pow2_bucket, pow2s
 from repro.engine.kv_cache import OutOfPagesError, PagedKVPool, pages_needed
-from repro.engine.model_runner import (PagedRunner, SequenceState, SlotRunner,
-                                       pick_runner)
+from repro.engine.runners import SequenceState, resolve_family
 from repro.engine.rtc import RelationalTensorCache, RTCCostModel
 from repro.engine.sampling import SamplingParams, sample_batch
 from repro.engine.scheduler import Scheduler, SchedulerConfig
@@ -83,10 +82,12 @@ class EngineConfig:
     max_batch_tokens: int = 64
     max_decode_batch: int = 8
     chunk_size: int = 16
+    max_prefill_seqs: int = 8           # concurrent mid-prefill sequences
     enable_prefix_cache: bool = True
     async_sched: bool = True
     fused_decode: bool = True           # NPU-centric hot loop (DESIGN.md §8)
     decode_horizon: int = 8             # max fused multi-step K (1 = off)
+    batched_prefill: bool = True        # one-dispatch ragged prefill (§12)
     dtype: Any = jnp.float32
     seed: int = 0
 
@@ -112,7 +113,10 @@ class FlowServe:
         self.cfg: ModelConfig = bundle.cfg
         self.ecfg = ecfg
         self.name = name
-        self.runner_kind = pick_runner(self.cfg)
+        # microkernel registry (DESIGN.md §12): the family — not an if-ladder
+        # here — decides pool-vs-slots, KV sharding, and runner construction
+        self.family = resolve_family(self.cfg)
+        self.runner_kind = self.family.name
         self.tokenizer = ByteTokenizer(max(self.cfg.vocab_size, 259))
         self.distflow = DistFlow(owner=name)
         self.fault_plan = None           # set by FaultPlan.attach (§11)
@@ -134,11 +138,10 @@ class FlowServe:
             params = jax.device_put(params, self.device)
             self._key = jax.device_put(self._key, self.device)
 
-        if self.runner_kind == "paged":
+        if self.family.uses_pages:
             kv_sharding = None
-            if self.mesh is not None:
-                from repro.launch.sharding import engine_kv_pool_sharding
-                kv_sharding = engine_kv_pool_sharding(self.cfg, self.mesh)
+            if self.mesh is not None and self.family.kv_pool_sharding is not None:
+                kv_sharding = self.family.kv_pool_sharding(self.cfg, self.mesh)
             self.pool = PagedKVPool(self.cfg, ecfg.n_pages, ecfg.page_size,
                                     ecfg.dtype, sharding=kv_sharding)
             if self.device is not None:
@@ -149,13 +152,14 @@ class FlowServe:
             cm = RTCCostModel(flops_per_token=2.0 * self.cfg.active_param_count())
             self.rtc = RelationalTensorCache(self.pool, cm) \
                 if ecfg.enable_prefix_cache else None
-            self.runner = PagedRunner(bundle, params, self.pool, ecfg.dtype,
-                                      mesh=self.mesh)
+            self.runner = self.family.build(bundle, params, self.pool,
+                                            dtype=ecfg.dtype, mesh=self.mesh)
         else:
             self.pool = None
             self.rtc = None
-            self.runner = SlotRunner(bundle, params, ecfg.n_slots, ecfg.max_len,
-                                     ecfg.dtype, mesh=self.mesh)
+            self.runner = self.family.build(bundle, params, dtype=ecfg.dtype,
+                                            mesh=self.mesh, n_slots=ecfg.n_slots,
+                                            max_len=ecfg.max_len)
             if self.device is not None:
                 self.runner.cache = {k: jax.device_put(v, self.device)
                                      for k, v in self.runner.cache.items()}
@@ -163,8 +167,10 @@ class FlowServe:
 
         scfg = SchedulerConfig(max_batch_tokens=ecfg.max_batch_tokens,
                                max_decode_batch=ecfg.max_decode_batch,
-                               chunk_size=ecfg.chunk_size, mode=ecfg.mode)
-        self.scheduler = Scheduler(scfg, self.rtc, self.runner_kind == "paged")
+                               chunk_size=ecfg.chunk_size,
+                               max_prefill_seqs=ecfg.max_prefill_seqs,
+                               mode=ecfg.mode)
+        self.scheduler = Scheduler(scfg, self.rtc, self.family.uses_pages)
         self._seqs: Dict[str, SequenceState] = {}
         self._requests: Dict[str, Request] = {}
         self._ttft: Dict[str, float] = {}
@@ -176,6 +182,13 @@ class FlowServe:
         self.sampler_dispatches = 0      # STANDALONE dispatches spent sampling
         self.host_dispatches = 0         # device dispatches on the decode path
         self.host_syncs = 0              # blocking device→host fetches
+        # prefill-side accounting (§12): dispatches counted in BOTH modes so
+        # benchmarks can compare dispatches-per-prompt-token; syncs are the
+        # batched path's first-token fetches (separate from decode host_syncs,
+        # which tests pin to the decode path)
+        self.prefill_dispatches = 0      # device dispatches on the prefill path
+        self.prefill_syncs = 0           # blocking fetches on the prefill path
+        self._prefill_key = None         # persistent in-dispatch sampling key
         self.sample_params: Dict[str, SamplingParams] = {}
         # decode hot loop (DESIGN.md §8): persistent device-resident batch
         # state, in-flight token blocks (fetched one horizon late), and the
@@ -190,6 +203,11 @@ class FlowServe:
     def jit_compiles(self) -> int:
         """Decode-path jit cache misses (bucketed keys ⇒ 0 in steady state)."""
         return getattr(self.runner, "jit_compiles", 0)
+
+    @property
+    def prefill_jit_compiles(self) -> int:
+        """Prefill-path jit cache misses (0 after ``warmup_prefill``)."""
+        return getattr(self.runner, "prefill_jit_compiles", 0)
 
     # ---------------------------------------------------------------- scaling
     @classmethod
@@ -309,8 +327,10 @@ class FlowServe:
         self._requests[req.req_id] = req
         self.sample_params[req.req_id] = req.sampling
         # a reused req_id may carry different sampling params: the cached
-        # per-batch temps/top_ps arrays would alias the old request's
+        # per-batch temps/top_ps arrays would alias the old request's —
+        # and a stale TTFT stamp would suppress re-stamping for the new one
         self._sp_cache = (None, None, None)
+        self._ttft.pop(req.req_id, None)
         if self.runner_kind == "slot" and self._state_cache is not None:
             self._try_state_reuse(seq)
         self.scheduler.admit(seq)
@@ -347,31 +367,11 @@ class FlowServe:
             self._drain_inflight()
 
         # ---------------- prefill chunks
-        for seq, start, chunk in plan.prefill:
-            if seq.n_cached != start or seq.seq_id not in self._seqs:
-                continue  # stale plan entry (seq preempted/finished)
-            if self.runner_kind == "paged":
-                if chunk:
-                    self._ensure_pages(seq, seq.n_cached + len(chunk))
-                    self.runner.prefill_chunk(seq, chunk)
+        if plan.prefill:
+            if self.family.uses_pages and self.ecfg.batched_prefill:
+                self._prefill_batched(plan.prefill)
             else:
-                if seq.slot is None:
-                    if not self.runner.alloc_slot(seq):
-                        self.scheduler.ready.appendleft(seq)  # no slot; retry
-                        if seq in self.scheduler.prefilling:
-                            self.scheduler.prefilling.remove(seq)
-                        continue
-                    snap_key = seq.extra.pop("_state_restore", None)
-                    if snap_key is not None:
-                        self.runner.restore_state(seq, self._state_cache[snap_key])
-                if chunk:
-                    self.runner.prefill_chunk(seq, chunk)
-            done = seq.n_cached >= len(seq.tokens) - 1
-            if done:
-                self._on_prefill_done(seq)
-                self.scheduler.on_prefill_progress(seq, True)
-            else:
-                self.scheduler.on_prefill_progress(seq, False)
+                self._prefill_legacy(plan.prefill)
 
         # ---------------- decode batch
         if plan.decode:
@@ -381,6 +381,8 @@ class FlowServe:
             fused = False
             if live and self.runner_kind == "paged" and self.ecfg.fused_decode:
                 fused = self._decode_fused_step(live)
+            elif live and self.runner_kind == "slot" and self.ecfg.fused_decode:
+                fused = self._decode_slot_fused(live)
             if not fused and live:
                 self._drain_inflight()
                 live = self._refilter(live)
@@ -423,6 +425,162 @@ class FlowServe:
             out.extend(self.step())
         return out
 
+    # ------------------------------------------------------- prefill paths
+    def _prefill_legacy(self, entries) -> None:
+        """Per-sequence prefill (the pre-§12 path, kept behind
+        ``batched_prefill=False`` for parity testing; also the slot family's
+        path): one batch-1 dispatch per sequence per chunk."""
+        for seq, start, chunk in entries:
+            if seq.n_cached != start or seq.seq_id not in self._seqs:
+                continue  # stale plan entry (seq preempted/finished)
+            if self.family.uses_pages:
+                if chunk:
+                    self._ensure_pages(seq, seq.n_cached + len(chunk))
+                    self.runner.prefill_chunk(seq, chunk)
+                    self.prefill_dispatches += 1
+            else:
+                if seq.slot is None:
+                    if not self.runner.alloc_slot(seq):
+                        self.scheduler.ready.appendleft(seq)  # no slot; retry
+                        if seq in self.scheduler.prefilling:
+                            self.scheduler.prefilling.remove(seq)
+                        continue
+                    snap_key = seq.extra.pop("_state_restore", None)
+                    if snap_key is not None:
+                        self.runner.restore_state(seq, self._state_cache[snap_key])
+                if chunk:
+                    self.runner.prefill_chunk(seq, chunk)
+                    self.prefill_dispatches += 1
+            done = seq.n_cached >= len(seq.tokens) - 1
+            if done:
+                self._on_prefill_done(seq)
+                self.scheduler.on_prefill_progress(seq, True)
+            else:
+                self.scheduler.on_prefill_progress(seq, False)
+
+    def _prefill_batched(self, entries) -> None:
+        """Batched ragged prefill (the §12 tentpole): pack EVERY planned
+        chunk — all sequences, ragged lengths — into ONE padded pow2-bucketed
+        dispatch of the prefill microkernel. A chunk that reaches
+        ``n_prompt - 1`` also takes the LAST prompt token as an extension
+        row, so the prompt's first generated token is sampled inside this
+        same dispatch (after it the sequence satisfies the decode invariant
+        ``n_cached == len(tokens) - 1`` exactly like a first decode step had
+        run). Padding tokens park on the pool's scratch page at position 0,
+        attending only to their own garbage slot."""
+        ps = self.ecfg.page_size
+        todo = []
+        for seq, start, chunk in entries:
+            if seq.n_cached != start or seq.seq_id not in self._seqs:
+                continue  # stale plan entry (seq preempted/finished)
+            if not chunk:
+                # single-token prompt or fully prefix-cached: prefill is
+                # vacuously done; run the done-transition
+                done = seq.n_cached >= len(seq.tokens) - 1
+                if done:
+                    self._on_prefill_done(seq)
+                self.scheduler.on_prefill_progress(seq, done)
+                continue
+            ext = (self.ecfg.mode != "prefill"
+                   and len(seq.tokens) == seq.n_prompt
+                   and start + len(chunk) == seq.n_prompt - 1)
+            todo.append((seq, start, list(chunk), ext))
+        if not todo:
+            return
+        for seq, start, chunk, ext in todo:
+            self._ensure_pages(seq, start + len(chunk) + (1 if ext else 0))
+        packed = []
+        for seq, start, chunk, ext in todo:
+            # a later entry's page allocation may have PREEMPTED an earlier
+            # one (pages released, n_cached reset) — the legacy loop catches
+            # that per-entry, the batched pack must re-validate before
+            # freezing indices; dropped entries are simply re-planned
+            if (seq.seq_id not in self._seqs or seq.n_cached != start
+                    or len(seq.pages) * ps
+                    < start + len(chunk) + (1 if ext else 0)):
+                continue
+            packed.append((seq, start, chunk, ext))
+        if not packed:
+            return
+        try:
+            scratch = self.pool.scratch_page()
+        except OutOfPagesError:
+            self._prefill_legacy([(s, st, ch) for s, st, ch, _ in packed])
+            return
+
+        # ---- pack the flat ragged token stream (host-side, numpy)
+        sb = pow2_bucket(max(self.ecfg.max_prefill_seqs, len(packed)))
+        pb = pow2_bucket(max(len(s.pages) for s, _, _, _ in packed))
+        flat_t, flat_p, flat_pg, flat_sl, rows = [], [], [], [], []
+        final_idx = np.zeros((sb,), np.int32)
+        temps = np.zeros((sb,), np.float32)
+        top_ps = np.ones((sb,), np.float32)
+        for i, (seq, start, chunk, ext) in enumerate(packed):
+            toks = chunk + ([seq.tokens[-1]] if ext else [])
+            row = seq.pages + [scratch] * (pb - len(seq.pages))
+            for j, t in enumerate(toks):
+                pos = start + j
+                flat_t.append(t)
+                flat_p.append(pos)
+                flat_pg.append(seq.pages[pos // ps])
+                flat_sl.append(pos % ps)
+                rows.append(row)
+            final_idx[i] = len(flat_t) - 1
+            if ext:
+                sp = self.sample_params[seq.seq_id]
+                temps[i] = sp.temperature
+                top_ps[i] = sp.top_p
+        tb = pow2_bucket(len(flat_t))
+        pad_row = [scratch] * pb
+        while len(flat_t) < tb:
+            flat_t.append(0)
+            flat_p.append(0)
+            flat_pg.append(scratch)
+            flat_sl.append(0)
+            rows.append(pad_row)
+
+        if self._prefill_key is None:
+            self._key, self._prefill_key = jax.random.split(self._key)
+        _, toks_dev, self._prefill_key = self.runner.prefill_ragged(
+            jnp.asarray(np.asarray(flat_t, np.int32)),
+            jnp.asarray(np.asarray(flat_p, np.int32)),
+            jnp.asarray(np.asarray(flat_pg, np.int32)),
+            jnp.asarray(np.asarray(flat_sl, np.int32)),
+            jnp.asarray(np.asarray(rows, np.int32)),
+            jnp.asarray(final_idx), jnp.asarray(temps), jnp.asarray(top_ps),
+            self._prefill_key)
+        self.prefill_dispatches += 1
+
+        # ---- commit: lengths, extension first-tokens, queue transitions
+        toks = None
+        if any(ext for _, _, _, ext in packed):
+            toks = np.asarray(toks_dev)
+            self.prefill_syncs += 1
+        for i, (seq, start, chunk, ext) in enumerate(packed):
+            seq.n_cached = start + len(chunk) + (1 if ext else 0)
+            if not ext:
+                done = seq.n_cached >= len(seq.tokens) - 1
+                if done:
+                    self._on_prefill_done(seq)
+                self.scheduler.on_prefill_progress(seq, done)
+                continue
+            tok = int(toks[i])
+            seq.tokens.append(tok)
+            if self._ttft.get(seq.seq_id, 0.0) == 0.0:
+                self._ttft[seq.seq_id] = (time.monotonic()
+                                          - self._requests[seq.seq_id].arrival)
+            self.scheduler.on_prefill_progress(seq, True)
+            sp = self.sample_params[seq.seq_id]
+            n_new = len(seq.tokens) - seq.n_prompt
+            if (sp.stop_on_eos and tok == EOS_ID) or n_new >= sp.max_new_tokens:
+                req = self._requests[seq.seq_id]
+                self._completed_buf.append(Completion(
+                    req_id=seq.seq_id, tokens=seq.tokens[seq.n_prompt:],
+                    ttft=self._ttft[seq.seq_id], finish=time.monotonic(),
+                    arrival=req.arrival, n_prompt=seq.n_prompt))
+                self.scheduler.on_finished(seq)
+                self.release_request(seq.seq_id)
+
     # ------------------------------------------------------- decode hot loop
     def warmup_decode(self, max_pages: Optional[int] = None,
                       horizons: Optional[List[int]] = None) -> int:
@@ -445,6 +603,26 @@ class FlowServe:
             pow2s(self.ecfg.max_decode_batch), pow2s(max_pages),
             horizons if horizons is not None
             else pow2s(self.ecfg.decode_horizon))
+
+    def warmup_prefill(self, max_tokens: Optional[int] = None,
+                       max_pages: Optional[int] = None) -> int:
+        """Precompile the batched ragged prefill jit grid (the prefill twin
+        of ``warmup_decode``, DESIGN.md §12): every pow2 token bucket up to
+        the step budget — plus one extension token per prompt row — × every
+        pow2 page bucket up to ``max_pages``. Serving stays recompile-free
+        for sequences within ``max_pages`` pages (same caveat as
+        ``warmup_decode``). Returns the number of executables compiled."""
+        if self.runner_kind != "paged" or not self.ecfg.batched_prefill:
+            return 0
+        if max_pages is None:
+            max_pages = max(1, self.ecfg.n_pages
+                            // max(1, self.ecfg.max_decode_batch))
+        cap = ((max_tokens if max_tokens is not None
+                else self.ecfg.max_batch_tokens)
+               + self.ecfg.max_prefill_seqs)
+        return self.runner.warmup_ragged(
+            pow2s(cap), pow2s(max_pages),
+            pow2_bucket(self.ecfg.max_prefill_seqs))
 
     def _refilter(self, seqs: List[SequenceState]) -> List[SequenceState]:
         return [s for s in seqs if s.seq_id in self._seqs
@@ -542,6 +720,37 @@ class FlowServe:
                 self._commit_oldest()
             return True
         return False
+
+    def _decode_slot_fused(self, live: List[SequenceState]) -> bool:
+        """Slot-family fused decode+sample (the SlotRunner sampling unifier,
+        §12 satellite): ONE dispatch runs the all-slot decode step AND
+        in-dispatch sampling through ``sampling.sample_core`` — vs the
+        legacy path's decode dispatch + standalone sampler dispatch. Only
+        the (n_slots,) sampled-token vector crosses to host; logits never
+        move. temps/top_ps are slot-indexed (the cache is live on their
+        composition, like the legacy batch-keyed cache)."""
+        batch_key = tuple((s.seq_id, s.slot) for s in live)
+        if self._sp_cache[0] != batch_key:
+            temps = np.zeros((self.ecfg.n_slots,), np.float32)
+            top_ps = np.ones((self.ecfg.n_slots,), np.float32)
+            for s in live:
+                sp = self.sample_params[s.seq_id]
+                temps[s.slot] = sp.temperature
+                top_ps[s.slot] = sp.top_p
+            self._sp_cache = (batch_key, temps, top_ps)
+        _, temps, top_ps = self._sp_cache
+        toks_dev, self._key = self.runner.decode_sample(
+            live, temps, top_ps, self._key)
+        self.decode_steps += 1
+        self.host_dispatches += 1
+        # async scheduling (§4.2): the next plan needs only counts — prepare
+        # it before the blocking token fetch
+        if self.ecfg.async_sched:
+            self._next_plan = self.scheduler.prepare_next()
+        toks = np.asarray(toks_dev)
+        self.host_syncs += 1
+        self._commit_sampled(live, [int(toks[s.slot]) for s in live])
+        return True
 
     def _commit_oldest(self) -> None:
         """Materialize the oldest in-flight token block and commit it:
@@ -945,9 +1154,14 @@ class FlowServe:
         self.sampler_dispatches += 1
         self.host_dispatches += 1
         self.host_syncs += 1             # np.asarray blocks on this step
-        for i, seq in enumerate(seqs):
+        self._commit_sampled(seqs, [int(toks[i]) for i in range(len(seqs))])
+
+    def _commit_sampled(self, seqs: List[SequenceState],
+                        toks: List[int]) -> None:
+        """Commit one freshly sampled token per sequence: append, stamp
+        TTFT, and finish on EOS / max_new_tokens."""
+        for seq, tok in zip(seqs, toks):
             sp = self.sample_params[seq.seq_id]
-            tok = int(toks[i])
             seq.tokens.append(tok)
             if seq.seq_id not in self._ttft or self._ttft[seq.seq_id] == 0.0:
                 self._ttft[seq.seq_id] = time.monotonic() - self._requests[seq.seq_id].arrival

@@ -1,514 +1,10 @@
-"""FLOWSERVE model-generator backends (the per-NPU executor side).
-
-Two runners cover the model zoo:
-
-  * ``PagedRunner`` — attention-only towers (dense / MoE / SWA /
-    local-global / qk-norm): true paged-KV continuous batching. Decode is
-    one jit'd step over the whole page pool (donated); prefill runs in
-    chunks that scatter fresh KV into pages (chunked prefill, §4.2).
-    On TPU the attention inside these steps dispatches to the Pallas
-    paged_attention / flash_prefill kernels via repro.kernels.ops.
-
-  * ``SlotRunner`` — recurrent / hybrid / cross-attention families (rwkv6,
-    recurrentgemma, seamless enc-dec, llama-vision): fixed batch slots with
-    dense per-slot caches (their state is O(1) or includes modality
-    memories). Continuous batching assigns sequences to free slots; prefix
-    reuse is state-checkpoint based (DESIGN.md §4).
-
-Both expose: prefill_chunk(seq, tokens) -> Optional[logits_row],
-decode(seqs) -> logits (B, Vp), plus export/import hooks for PD
-disaggregation (DistFlow payloads).
+"""Compatibility shim — the runners moved to ``repro.engine.runners``
+(DESIGN.md §12: per-family Prefill/Decode microkernel pairs behind a
+registry). This module re-exports the public names so existing imports
+(`scheduler`, tests, downstream scripts) keep working; new code should
+import from ``repro.engine.runners``.
 """
-from __future__ import annotations
+from repro.engine.runners import (PagedRunner, SequenceState,  # noqa: F401
+                                  SlotRunner, pick_runner)
 
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding
-from jax.sharding import PartitionSpec as P
-
-from repro.configs.base import ModelConfig
-from repro.engine.kv_cache import PagedKVPool, pages_needed
-from repro.kernels import ref as KREF
-from repro.launch import sharding as SH
-from repro.models import layers as L
-from repro.models import serving as S
-from repro.models import transformer as T
-from repro.models.model_factory import ModelBundle
-
-
-def pick_runner(cfg: ModelConfig) -> str:
-    if cfg.attn_kind in ("global", "swa", "local_global") and cfg.vision is None \
-            and cfg.encoder is None:
-        return "paged"
-    return "slot"
-
-
-@dataclass
-class SequenceState:
-    seq_id: str
-    tokens: List[int]                   # full token ids (prompt + generated)
-    n_prompt: int
-    n_cached: int = 0                   # tokens with KV/state materialized
-    pages: List[int] = field(default_factory=list)
-    reused_pages: int = 0               # prefix-cache pages (shared, pinned)
-    slot: Optional[int] = None          # SlotRunner slot id
-    state: Any = None                   # SlotRunner per-seq state snapshot
-    extra: Dict[str, Any] = field(default_factory=dict)  # modality stubs
-
-
-# ===========================================================================
-# Paged runner
-# ===========================================================================
-
-
-class PagedRunner:
-    """With ``mesh`` set (EngineConfig.tp > 1) the runner is the TE's SPMD
-    executor: weights live sharded per launch/sharding.py's policy, the page
-    pool shards whole KV heads over `model`, and the jit'd decode/prefill
-    steps pin in_shardings/out_shardings so every step is one SPMD program
-    spanning the mesh (collectives inserted by GSPMD)."""
-
-    def __init__(self, bundle: ModelBundle, params, pool: PagedKVPool,
-                 dtype=jnp.float32, mesh=None):
-        self.bundle = bundle
-        self.cfg = bundle.cfg
-        self.pool = pool
-        self.dtype = dtype
-        self.mesh = mesh
-        if mesh is not None:
-            self._param_sh = SH.engine_param_shardings(self.cfg, params, mesh)
-            self._kv_sh = pool.sharding if pool.sharding is not None \
-                else SH.engine_kv_pool_sharding(self.cfg, mesh)
-            self._repl = NamedSharding(mesh, P())
-            params = jax.device_put(params, self._param_sh)
-        self.params = params
-        self._wins = [int(w) for w in np.asarray(T.window_schedule(self.cfg))]
-        self._decode_fns: Dict[int, Any] = {}
-        self._prefill_fns: Dict[Tuple[int, int], Any] = {}
-        # decode hot loop (DESIGN.md §8): bucketed fused decode+sample jits,
-        # keyed (k_steps, batch_bucket, page_bucket); jit_compiles counts
-        # decode-path cache misses so the engine can assert zero recompiles
-        # in steady state after the warmup pass.
-        self._fused_fns: Dict[Tuple[int, int, int], Any] = {}
-        self.jit_compiles = 0
-
-    def _jit_step(self, fn, donate: Tuple[int, ...]):
-        """jit with TP shardings pinned when the runner spans a mesh:
-        weights keep their placement, token/page operands replicate, and the
-        (donated) KV pool stays head-sharded in and out."""
-        if self.mesh is None:
-            return jax.jit(fn, donate_argnums=donate)
-        r, kv = self._repl, self._kv_sh
-        return jax.jit(fn, donate_argnums=donate,
-                       in_shardings=(self._param_sh, r, r, r, kv, kv),
-                       out_shardings=(r, kv, kv))
-
-    # ------------------------------------------------------------ decode
-    def decode(self, seqs: List[SequenceState]) -> jax.Array:
-        """One decode step for a batch of sequences. The new token of each
-        seq is seqs[i].tokens[-1]; KV is written at position len(tokens)-1.
-        Caller must have appended a page if needed."""
-        b = len(seqs)
-        maxp = max(len(s.pages) for s in seqs)
-        bt = np.zeros((b, maxp), np.int32)
-        for i, s in enumerate(seqs):
-            bt[i, :len(s.pages)] = s.pages
-        tokens = jnp.asarray([s.tokens[-1] for s in seqs], jnp.int32)
-        lengths = jnp.asarray([len(s.tokens) for s in seqs], jnp.int32)
-        fn = self._decode_fn(maxp)
-        logits, self.pool.k, self.pool.v = fn(
-            self.params, tokens, jnp.asarray(bt), lengths, self.pool.k, self.pool.v)
-        for s in seqs:
-            s.n_cached = len(s.tokens)
-        return logits
-
-    def _decode_body(self, params, tokens, bt, lengths, k_pool, v_pool):
-        """Traceable single decode step: (B,) token ids + device metadata →
-        (B, Vp) logits + updated pools. Shared by the legacy per-step jit and
-        the fused decode+sample horizon (DESIGN.md §8)."""
-        cfg = self.cfg
-        wins = self._wins
-        ps = self.pool.page_size
-        b = tokens.shape[0]
-        x = T.embed(cfg, params, tokens[:, None])
-        pos = (lengths - 1)[:, None]
-        bidx = jnp.arange(b)
-        page = bt[bidx, (lengths - 1) // ps]
-        slot = (lengths - 1) % ps
-        for li in range(cfg.n_layers):
-            p = jax.tree.map(lambda a: a[li], params["blocks"])
-            h = L.apply_norm(x, p["ln1"], cfg.norm)
-            q, k_new, v_new = L.attn_qkv(p["attn"], h, cfg.n_heads,
-                                         cfg.n_kv_heads, cfg.head_dim,
-                                         pos, cfg.rope_theta, cfg.qk_norm)
-            k_pool = k_pool.at[li, page, slot].set(k_new[:, 0])
-            v_pool = v_pool.at[li, page, slot].set(v_new[:, 0])
-            win = wins[li] if wins[li] < T.GLOBAL_WINDOW else None
-            o = KREF.paged_attention_ref(q[:, 0], k_pool[li], v_pool[li],
-                                         bt, lengths,
-                                         softcap=cfg.attn_logit_softcap,
-                                         window=win)
-            x = x + S._post_attn(cfg, p, L.attn_out(p["attn"], o[:, None]))
-            h = L.apply_norm(x, p["ln2"], cfg.norm)
-            if "moe" in p:
-                from repro.models import moe as M
-                m = M.moe_apply(p["moe"], h, cfg.moe, cfg.mlp_act, groups=1)
-            else:
-                m = L.mlp_apply(p["mlp"], h, cfg.mlp_act)
-            if cfg.post_norms:
-                m = L.apply_norm(m, p["ln2_post"], cfg.norm)
-            x = x + m
-        logits = T.unembed(cfg, params, x)[:, 0]
-        return logits, k_pool, v_pool
-
-    def _decode_fn(self, maxp: int):
-        if maxp in self._decode_fns:
-            return self._decode_fns[maxp]
-        self.jit_compiles += 1
-
-        def step(params, tokens, bt, lengths, k_pool, v_pool):
-            return self._decode_body(params, tokens, bt, lengths,
-                                     k_pool, v_pool)
-
-        step = self._jit_step(step, donate=(4, 5))
-        self._decode_fns[maxp] = step
-        return step
-
-    # ---------------------------------------------- fused decode hot loop
-    def decode_fused(self, state, k_steps: int) -> jax.Array:
-        """NPU-centric decode (DESIGN.md §8): run ``k_steps`` decode+sample
-        iterations as ONE device dispatch over the persistent device-resident
-        batch state. Sampling is fused into the step — logits never leave the
-        device — and the carried metadata (lengths, last tokens, PRNG key)
-        advances in-jit, so the host's only job is this dispatch. Returns the
-        (k_steps, batch_bucket) sampled-token block WITHOUT materializing it
-        on the host; the caller fetches it asynchronously a horizon later."""
-        fn = self._decode_fused_fn(k_steps, state.bb, state.pb)
-        (toks, state.key, state.last_tok, state.lengths,
-         self.pool.k, self.pool.v) = fn(
-            self.params, state.bt, state.active, state.temps, state.top_ps,
-            state.key, state.last_tok, state.lengths,
-            self.pool.k, self.pool.v)
-        return toks
-
-    def _decode_fused_fn(self, k_steps: int, bb: int, pb: int):
-        key_t = (k_steps, bb, pb)
-        fn = self._fused_fns.get(key_t)
-        if fn is not None:
-            return fn
-        self.jit_compiles += 1
-        cfg = self.cfg
-        from repro.engine.sampling import greedy_core, sample_core
-
-        def horizon(params, bt, active, temps, top_ps, key, last_tok,
-                    lengths, k_pool, v_pool):
-            act = active.astype(jnp.int32)
-            # the all-greedy shortcut v1's sample_batch takes on the host,
-            # moved in-jit: one traced predicate selects pure argmax over the
-            # full top-p pipeline at runtime (per-row results are identical)
-            all_greedy = jnp.all(temps <= 0.0)
-
-            def one(carry, _):
-                key, last_tok, lengths, k_pool, v_pool = carry
-                logits, k_pool, v_pool = self._decode_body(
-                    params, last_tok, bt, lengths, k_pool, v_pool)
-                key, sub = jax.random.split(key)
-                toks = jax.lax.cond(
-                    all_greedy,
-                    lambda lg: greedy_core(lg, cfg.vocab_size),
-                    lambda lg: sample_core(lg, temps, top_ps, sub,
-                                           cfg.vocab_size),
-                    logits)
-                # padding rows: freeze token + length so their KV write stays
-                # parked at slot 0 of the pool's scratch page forever
-                toks = jnp.where(active, toks, last_tok)
-                return (key, toks, lengths + act, k_pool, v_pool), toks
-
-            (key, last_tok, lengths, k_pool, v_pool), toks = jax.lax.scan(
-                one, (key, last_tok, lengths, k_pool, v_pool), None,
-                length=k_steps)
-            return toks, key, last_tok, lengths, k_pool, v_pool
-
-        if self.mesh is None:
-            fn = jax.jit(horizon, donate_argnums=(8, 9))
-        else:
-            r, kv = self._repl, self._kv_sh
-            fn = jax.jit(horizon, donate_argnums=(8, 9),
-                         in_shardings=(self._param_sh, r, r, r, r, r, r, r,
-                                       kv, kv),
-                         out_shardings=(r, r, r, r, kv, kv))
-        self._fused_fns[key_t] = fn
-        return fn
-
-    def warmup_fused(self, batch_buckets, page_buckets, horizons) -> int:
-        """Precompile the bucketed fused decode jits ahead of serving (the
-        §4.2 warmup pass) so steady state never recompiles. Runs each bucket
-        combination once against a transient throwaway KV pool (donated and
-        chained call-to-call, so the warmup never touches live pages and
-        peaks at one extra pool copy). Returns the number of executables
-        compiled. Note: ``jit.lower().compile()`` does NOT seed the dispatch
-        cache on this jax version, so the warmup must really call."""
-        k = jnp.zeros_like(self.pool.k)
-        v = jnp.zeros_like(self.pool.v)
-        if self.mesh is not None:
-            k = jax.device_put(k, self._kv_sh)
-            v = jax.device_put(v, self._kv_sh)
-        key = jax.random.PRNGKey(0)
-        n = 0
-        for k_steps in sorted(set(horizons)):
-            for bb in sorted(set(batch_buckets)):
-                for pb in sorted(set(page_buckets)):
-                    fn = self._decode_fused_fn(k_steps, bb, pb)
-                    _, key, _, _, k, v = fn(
-                        self.params, jnp.zeros((bb, pb), jnp.int32),
-                        jnp.zeros((bb,), bool), jnp.zeros((bb,), jnp.float32),
-                        jnp.ones((bb,), jnp.float32), key,
-                        jnp.zeros((bb,), jnp.int32),
-                        jnp.ones((bb,), jnp.int32), k, v)
-                    n += 1
-        jax.block_until_ready(k)
-        return n
-
-    # ------------------------------------------------------------ prefill
-    def prefill_chunk(self, seq: SequenceState, chunk_tokens: List[int]
-                      ) -> Optional[jax.Array]:
-        """Run one prompt chunk; returns last-token logits when this chunk
-        completes the prompt (so the engine can sample the first token)."""
-        c = len(chunk_tokens)
-        start = seq.n_cached
-        npages = len(seq.pages)
-        fn = self._prefill_fn(c, npages)
-        tokens = jnp.asarray(chunk_tokens, jnp.int32)[None]
-        bt = jnp.asarray(seq.pages, jnp.int32)[None]
-        logits, self.pool.k, self.pool.v = fn(
-            self.params, tokens, jnp.asarray([start], jnp.int32), bt,
-            self.pool.k, self.pool.v)
-        seq.n_cached = start + c
-        if seq.n_cached >= seq.n_prompt:
-            return logits[0]
-        return None
-
-    def _prefill_fn(self, c: int, npages: int):
-        key = (c, npages)
-        if key in self._prefill_fns:
-            return self._prefill_fns[key]
-        cfg = self.cfg
-        wins = self._wins
-        ps = self.pool.page_size
-
-        def run(params, tokens, start, bt, k_pool, v_pool):
-            x = T.embed(cfg, params, tokens)                    # (1,C,D)
-            positions = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None]
-            flat = start[0] + jnp.arange(c)
-            page = bt[0, flat // ps]
-            slot = flat % ps
-            total = npages * ps
-            kpos_base = jnp.arange(total, dtype=jnp.int32)[None]
-            for li in range(cfg.n_layers):
-                p = jax.tree.map(lambda a: a[li], params["blocks"])
-                h = L.apply_norm(x, p["ln1"], cfg.norm)
-                q, k_new, v_new = L.attn_qkv(p["attn"], h, cfg.n_heads,
-                                             cfg.n_kv_heads, cfg.head_dim,
-                                             positions, cfg.rope_theta, cfg.qk_norm)
-                k_pool = k_pool.at[li, page, slot].set(k_new[0])
-                v_pool = v_pool.at[li, page, slot].set(v_new[0])
-                k_seq = k_pool[li, bt[0]].reshape(1, total, cfg.n_kv_heads, cfg.head_dim)
-                v_seq = v_pool[li, bt[0]].reshape(1, total, cfg.n_kv_heads, cfg.head_dim)
-                kpos = jnp.where(kpos_base < (start[0] + c), kpos_base,
-                                 T.GLOBAL_WINDOW + 1)
-                mask = L.causal_mask(positions, kpos)
-                mask &= kpos[:, None, :] > (positions[:, :, None] - wins[li])
-                o = L.attention(q, k_seq, v_seq, mask, cfg.attn_logit_softcap)
-                x = x + S._post_attn(cfg, p, L.attn_out(p["attn"], o))
-                h = L.apply_norm(x, p["ln2"], cfg.norm)
-                if "moe" in p:
-                    from repro.models import moe as M
-                    m = M.moe_apply(p["moe"], h, cfg.moe, cfg.mlp_act, groups=1)
-                else:
-                    m = L.mlp_apply(p["mlp"], h, cfg.mlp_act)
-                if cfg.post_norms:
-                    m = L.apply_norm(m, p["ln2_post"], cfg.norm)
-                x = x + m
-            logits = T.unembed(cfg, params, x[:, -1:])[:, 0]
-            return logits, k_pool, v_pool
-
-        run = self._jit_step(run, donate=(4, 5))
-        self._prefill_fns[key] = run
-        return run
-
-    # ------------------------------------------------------------ PD export
-    def export_kv(self, seq: SequenceState, host_gather: bool = False):
-        """DistFlow payload for PD-disaggregation: page run + metadata.
-
-        Default (v2): the run stays a sharded ``jax.Array`` pair — one jit'd
-        gather, no host round-trip; DistFlow moves/reshards it device-to-
-        device. ``host_gather=True`` keeps the v1 numpy path (benchmark
-        baseline and DCN/pickle-style escape hatch)."""
-        meta = {"tokens": list(seq.tokens), "n_prompt": seq.n_prompt,
-                "n_cached": seq.n_cached, "n_pages": len(seq.pages)}
-        if host_gather:
-            k, v = self.pool.gather(seq.pages)
-            return {"k": np.asarray(k), "v": np.asarray(v),
-                    "host_gather": True, **meta}
-        k, v = self.pool.gather_device(seq.pages)
-        return {"k": k, "v": v, **meta}
-
-    def import_kv(self, payload, pages: List[int]) -> None:
-        """Install a migrated page run. v2 payloads (device arrays or the
-        layer-chunked ``{"chunks": [...]}`` a MigrationHandle.wait() yields)
-        go through the donated jit'd scatter; v1 host payloads keep the
-        un-jitted full-pool rewrite for benchmark comparison."""
-        if payload.get("host_gather"):
-            idx = jnp.asarray(pages[:payload["k"].shape[1]], jnp.int32)
-            self.pool.k = self.pool.k.at[:, idx].set(jnp.asarray(payload["k"]))
-            self.pool.v = self.pool.v.at[:, idx].set(jnp.asarray(payload["v"]))
-            self.pool.full_pool_copies += 2          # k and v each rewritten
-            return
-        chunks = payload.get("chunks")
-        if chunks is None:
-            chunks = [(0, payload["k"], payload["v"])]
-        # the run covers the pages allocated at import time; a lazy (overlap)
-        # import may fire after _ensure_pages appended the next decode page
-        pages = pages[:chunks[0][1].shape[1]]
-        target = self.pool.run_sharding()
-        for l0, k_run, v_run in chunks:
-            # no-op when DistFlow already resharded onto this mesh; real
-            # placement change only for payloads that skipped transfer_sharded
-            k_run = jax.device_put(k_run, target)
-            v_run = jax.device_put(v_run, target)
-            self.pool.scatter_run(pages, k_run, v_run, layer_start=l0)
-
-
-# ===========================================================================
-# Slot runner (recurrent / hybrid / cross-attention families)
-# ===========================================================================
-
-
-class SlotRunner:
-    def __init__(self, bundle: ModelBundle, params, n_slots: int, max_len: int,
-                 dtype=jnp.float32, mesh=None):
-        self.bundle = bundle
-        self.cfg = bundle.cfg
-        self.n_slots = n_slots
-        self.max_len = max_len
-        self.dtype = dtype
-        self.mesh = mesh
-        cache = bundle.init_cache(n_slots, max_len, dtype)
-        if mesh is not None:
-            # SPMD TE: weights + dense per-slot caches shard per
-            # launch/sharding.py (k/v shard the sequence dim over the mesh;
-            # recurrent state shards its width/head dims where divisible).
-            self._param_sh = SH.engine_param_shardings(self.cfg, params, mesh)
-            self._cache_sh = SH.engine_cache_shardings(self.cfg, cache, mesh,
-                                                       n_slots, max_len)
-            self._repl = NamedSharding(mesh, P())
-            params = jax.device_put(params, self._param_sh)
-            cache = jax.device_put(cache, self._cache_sh)
-            self._decode_jit = jax.jit(
-                lambda p, t, c: S.decode_step(self.cfg, p, t, c),
-                in_shardings=(self._param_sh, self._repl, self._cache_sh),
-                out_shardings=(self._repl, self._cache_sh))
-        else:
-            self._decode_jit = jax.jit(
-                lambda p, t, c: S.decode_step(self.cfg, p, t, c))
-        self.params = params
-        self.cache = cache
-        self.free_slots = list(range(n_slots))
-        self._prefill_jits: Dict[int, Any] = {}
-
-    # batch-dim axis for every cache leaf except `length`
-    def _slot_slice(self, slot: int):
-        def f(path, a):
-            if path == "length":
-                return a[slot:slot + 1]
-            return a[:, slot:slot + 1]
-        return {k: f(k, v) for k, v in self.cache.items()}
-
-    def _slot_write(self, slot: int, sub):
-        for k, v in sub.items():
-            if k == "length":
-                self.cache[k] = self.cache[k].at[slot].set(v[0])
-            else:
-                self.cache[k] = self.cache[k].at[:, slot].set(v[:, 0])
-
-    def alloc_slot(self, seq: SequenceState) -> bool:
-        if not self.free_slots:
-            return False
-        seq.slot = self.free_slots.pop()
-        # reset slot length AND recurrent/conv state — stale KV is masked by
-        # length, but recurrent state would leak the previous occupant.
-        self.cache["length"] = self.cache["length"].at[seq.slot].set(0)
-        for key in ("state", "last_tm", "last_cm", "h", "conv"):
-            if key in self.cache:
-                self.cache[key] = self.cache[key].at[:, seq.slot].set(0)
-        return True
-
-    def free_slot(self, seq: SequenceState) -> None:
-        if seq.slot is not None:
-            self.free_slots.append(seq.slot)
-            seq.slot = None
-
-    def prefill_chunk(self, seq: SequenceState, chunk_tokens: List[int]
-                      ) -> Optional[jax.Array]:
-        c = len(chunk_tokens)
-        sub = self._slot_slice(seq.slot)
-        fn = self._prefill_fn(c)
-        extra = {k: jnp.asarray(v) for k, v in seq.extra.items()}
-        logits, sub = fn(self.params, jnp.asarray(chunk_tokens, jnp.int32)[None],
-                         sub, extra)
-        self._slot_write(seq.slot, sub)
-        seq.n_cached += c
-        if seq.n_cached >= seq.n_prompt:
-            return logits[0]
-        return None
-
-    def _prefill_fn(self, c: int):
-        if c in self._prefill_jits:
-            return self._prefill_jits[c]
-        cfg = self.cfg
-
-        def run(params, tokens, cache, extra):
-            return S.prefill(cfg, params, tokens, cache, **extra)
-
-        if self.mesh is not None:
-            # `extra` (modality stubs) replicates: a single sharding works as
-            # a pytree prefix over the whole dict.
-            run = jax.jit(run, in_shardings=(self._param_sh, self._repl,
-                                             self._cache_sh, self._repl),
-                          out_shardings=(self._repl, self._cache_sh))
-        else:
-            run = jax.jit(run)
-        self._prefill_jits[c] = run
-        return self._prefill_jits[c]
-
-    def decode(self, seqs: List[SequenceState]) -> jax.Array:
-        """Decode all active slots in one batched step; returns logits rows
-        aligned with `seqs` order."""
-        tokens = np.zeros((self.n_slots,), np.int32)
-        for s in seqs:
-            tokens[s.slot] = s.tokens[-1]
-        logits, self.cache = self._decode_jit(self.params,
-                                              jnp.asarray(tokens), self.cache)
-        for s in seqs:
-            s.n_cached = len(s.tokens)
-        return logits[jnp.asarray([s.slot for s in seqs])]
-
-    # state checkpointing (prefix cache for recurrent archs)
-    def snapshot_state(self, seq: SequenceState):
-        sub = self._slot_slice(seq.slot)
-        return jax.tree.map(np.asarray, sub)
-
-    def restore_state(self, seq: SequenceState, snap) -> None:
-        self._slot_write(seq.slot, jax.tree.map(jnp.asarray, snap))
-        seq.n_cached = int(snap["length"][0])
-
-    def export_kv(self, seq: SequenceState):
-        return {"state": self.snapshot_state(seq), "tokens": list(seq.tokens),
-                "n_prompt": seq.n_prompt, "n_cached": seq.n_cached}
-
-    def import_kv(self, payload, seq: SequenceState) -> None:
-        self.restore_state(seq, payload["state"])
+__all__ = ["PagedRunner", "SequenceState", "SlotRunner", "pick_runner"]

@@ -1,0 +1,41 @@
+"""Runner-family registry package (DESIGN.md §12).
+
+Importing this package registers the built-in families in match order:
+
+  * ``paged`` — attention-only towers (global / swa / local_global, no
+    modality encoders): paged-KV continuous batching with the batched
+    ragged prefill + fused decode microkernels.
+  * ``slot``  — everything else (recurrent / hybrid / cross-attention):
+    fixed batch slots with dense per-slot caches; registered last with an
+    always-true predicate, so it is the fallback.
+
+New families register through ``register_family`` without touching the
+engine: FLOWSERVE resolves them via ``resolve_family(cfg)``.
+"""
+from repro.engine.runners.base import (RunnerFamily,  # noqa: F401
+                                       SequenceState, families, pick_runner,
+                                       register_family, resolve_family)
+from repro.engine.runners.paged import PagedRunner  # noqa: F401
+from repro.engine.runners.slot import SlotRunner  # noqa: F401
+from repro.launch.sharding import engine_kv_pool_sharding
+
+
+def _paged_matches(cfg) -> bool:
+    return (cfg.attn_kind in ("global", "swa", "local_global")
+            and cfg.vision is None and cfg.encoder is None)
+
+
+register_family(RunnerFamily(
+    name="paged",
+    runner_cls=PagedRunner,
+    matches=_paged_matches,
+    uses_pages=True,
+    kv_pool_sharding=engine_kv_pool_sharding,
+))
+
+register_family(RunnerFamily(
+    name="slot",
+    runner_cls=SlotRunner,
+    matches=lambda cfg: True,
+    uses_pages=False,
+))

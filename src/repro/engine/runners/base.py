@@ -1,0 +1,98 @@
+"""Runner-family registry (DESIGN.md §12, the paper's "microkernel" FLOWSERVE).
+
+The model zoo does not share one execution strategy: attention-only towers
+batch through a paged KV pool, recurrent/hybrid/cross-attention families
+batch through fixed per-slot dense caches. Before this registry the engine
+special-cased the split ad hoc (``pick_runner`` string compares in
+``model_runner.py`` / ``flowserve.py``). Now each family is a registered
+``RunnerFamily``: a predicate over ``ModelConfig``, the runner class that
+executes it, and the family's sharding hooks — FLOWSERVE resolves the
+family once at engine construction and every later decision (pool vs
+slots, KV-pool sharding, fused-prefill/fused-decode support) is a method
+on the family, not an if-ladder in the engine.
+
+Each family's runner is itself split per phase — a ``*PrefillRunner`` and a
+``*DecodeRunner`` microkernel pair behind one facade — so workload features
+(batched ragged prefill, fused decode+sample horizons, later constrained
+decoding / speculative verify) land in exactly one phase runner without
+touching the other.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass
+class SequenceState:
+    seq_id: str
+    tokens: List[int]                   # full token ids (prompt + generated)
+    n_prompt: int
+    n_cached: int = 0                   # tokens with KV/state materialized
+    pages: List[int] = field(default_factory=list)
+    reused_pages: int = 0               # prefix-cache pages (shared, pinned)
+    slot: Optional[int] = None          # SlotRunner slot id
+    state: Any = None                   # SlotRunner per-seq state snapshot
+    extra: Dict[str, Any] = field(default_factory=dict)  # modality stubs
+
+
+@dataclass(frozen=True)
+class RunnerFamily:
+    """One entry in the microkernel registry.
+
+    ``matches`` decides whether this family executes a given model config;
+    families are tried in registration order, so the fallback family
+    registers last with an always-true predicate. ``uses_pages`` selects the
+    engine's KV data plane (paged pool + RTC prefix cache vs dense slot
+    caches + state checkpoints); ``kv_pool_sharding`` is the family's TP
+    placement rule for that plane (None ⇒ the family has no paged pool).
+    """
+    name: str
+    runner_cls: type
+    matches: Callable[[ModelConfig], bool]
+    uses_pages: bool
+    kv_pool_sharding: Optional[Callable[[ModelConfig, Any], Any]] = None
+
+    def build(self, bundle, params, pool=None, *, dtype, mesh=None, **kw):
+        """Construct the family's runner (the facade over its prefill/decode
+        pair). Paged families take the engine's page pool; slot families
+        take slot geometry via ``kw``."""
+        if self.uses_pages:
+            return self.runner_cls(bundle, params, pool, dtype, mesh=mesh,
+                                   **kw)
+        return self.runner_cls(bundle, params, dtype=dtype, mesh=mesh, **kw)
+
+
+_FAMILIES: List[RunnerFamily] = []
+
+
+def register_family(family: RunnerFamily) -> RunnerFamily:
+    """Append a family to the registry (order = match priority). Replaces a
+    same-named entry in place so reloads / test doubles stay idempotent."""
+    for i, f in enumerate(_FAMILIES):
+        if f.name == family.name:
+            _FAMILIES[i] = family
+            return family
+    _FAMILIES.append(family)
+    return family
+
+
+def resolve_family(cfg: ModelConfig) -> RunnerFamily:
+    """First registered family whose predicate accepts ``cfg``."""
+    for fam in _FAMILIES:
+        if fam.matches(cfg):
+            return fam
+    raise LookupError(
+        f"no runner family matches model {getattr(cfg, 'name', cfg)!r}")
+
+
+def families() -> List[RunnerFamily]:
+    return list(_FAMILIES)
+
+
+def pick_runner(cfg: ModelConfig) -> str:
+    """Family NAME for a config — the legacy string API, now a registry
+    lookup (kept because tests and the serving plane key on the string)."""
+    return resolve_family(cfg).name

@@ -1,0 +1,261 @@
+"""Slot runner family: recurrent / hybrid / cross-attention towers (rwkv6,
+recurrentgemma, seamless enc-dec, llama-vision) batching through fixed
+per-slot dense caches (their state is O(1) or includes modality memories).
+Continuous batching assigns sequences to free slots; prefix reuse is
+state-checkpoint based (DESIGN.md §4).
+
+``SlotRunner`` is the family facade over the phase pair (DESIGN.md §12):
+
+  * ``SlotPrefillRunner`` — chunked prefill through ``serving.prefill``.
+    Chunk lengths are pow2-bucketed with a masked tail (``n_valid`` threads
+    through the model stack: pad steps are exact identities for the
+    recurrences, causally masked for attention layers), so arbitrary prompt
+    shapes share O(log max_chunk) jit executables instead of minting one
+    per raw length. ``bucket_prefill=False`` keeps the raw-length path for
+    parity testing.
+  * ``SlotDecodeRunner`` — all-slot batched decode, plus ``decode_sample``:
+    decode + ``sampling.sample_core`` fused into ONE dispatch (the slot
+    twin of the paged fused hot loop), so logits never reach the host.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.engine.hotloop import pow2_bucket
+from repro.engine.runners.base import SequenceState
+from repro.launch import sharding as SH
+from repro.models import serving as S
+from repro.models.model_factory import ModelBundle
+
+
+class SlotRunner:
+    """Family facade: slot bookkeeping + dense caches + phase delegation
+    (public API of the pre-registry SlotRunner, preserved verbatim)."""
+
+    def __init__(self, bundle: ModelBundle, params, n_slots: int, max_len: int,
+                 dtype=jnp.float32, mesh=None, bucket_prefill: bool = True):
+        self.bundle = bundle
+        self.cfg = bundle.cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.dtype = dtype
+        self.mesh = mesh
+        self.bucket_prefill = bucket_prefill
+        cache = bundle.init_cache(n_slots, max_len, dtype)
+        if mesh is not None:
+            # SPMD TE: weights + dense per-slot caches shard per
+            # launch/sharding.py (k/v shard the sequence dim over the mesh;
+            # recurrent state shards its width/head dims where divisible).
+            self._param_sh = SH.engine_param_shardings(self.cfg, params, mesh)
+            self._cache_sh = SH.engine_cache_shardings(self.cfg, cache, mesh,
+                                                       n_slots, max_len)
+            self._repl = NamedSharding(mesh, P())
+            params = jax.device_put(params, self._param_sh)
+            cache = jax.device_put(cache, self._cache_sh)
+        self.params = params
+        self.cache = cache
+        self.free_slots = list(range(n_slots))
+        self.jit_compiles = 0            # decode-path cache misses
+        self.prefill_jit_compiles = 0    # prefill-path cache misses
+        self.prefill = SlotPrefillRunner(self)
+        self.decoder = SlotDecodeRunner(self)
+
+    # batch-dim axis for every cache leaf except `length`
+    def _slot_slice(self, slot: int):
+        def f(path, a):
+            if path == "length":
+                return a[slot:slot + 1]
+            return a[:, slot:slot + 1]
+        return {k: f(k, v) for k, v in self.cache.items()}
+
+    def _slot_write(self, slot: int, sub):
+        for k, v in sub.items():
+            if k == "length":
+                self.cache[k] = self.cache[k].at[slot].set(v[0])
+            else:
+                self.cache[k] = self.cache[k].at[:, slot].set(v[:, 0])
+
+    def alloc_slot(self, seq: SequenceState) -> bool:
+        if not self.free_slots:
+            return False
+        seq.slot = self.free_slots.pop()
+        # reset slot length AND recurrent/conv state — stale KV is masked by
+        # length, but recurrent state would leak the previous occupant.
+        self.cache["length"] = self.cache["length"].at[seq.slot].set(0)
+        for key in ("state", "last_tm", "last_cm", "h", "conv"):
+            if key in self.cache:
+                self.cache[key] = self.cache[key].at[:, seq.slot].set(0)
+        return True
+
+    def free_slot(self, seq: SequenceState) -> None:
+        if seq.slot is not None:
+            self.free_slots.append(seq.slot)
+            seq.slot = None
+
+    # phase delegation
+    def prefill_chunk(self, seq: SequenceState, chunk_tokens: List[int]
+                      ) -> Optional[jax.Array]:
+        return self.prefill.prefill_chunk(seq, chunk_tokens)
+
+    def decode(self, seqs: List[SequenceState]) -> jax.Array:
+        return self.decoder.decode(seqs)
+
+    def decode_sample(self, seqs: List[SequenceState], temps, top_ps, key):
+        return self.decoder.decode_sample(seqs, temps, top_ps, key)
+
+    # state checkpointing (prefix cache for recurrent archs)
+    def snapshot_state(self, seq: SequenceState):
+        sub = self._slot_slice(seq.slot)
+        return jax.tree.map(np.asarray, sub)
+
+    def restore_state(self, seq: SequenceState, snap) -> None:
+        self._slot_write(seq.slot, jax.tree.map(jnp.asarray, snap))
+        seq.n_cached = int(snap["length"][0])
+
+    def export_kv(self, seq: SequenceState):
+        return {"state": self.snapshot_state(seq), "tokens": list(seq.tokens),
+                "n_prompt": seq.n_prompt, "n_cached": seq.n_cached}
+
+    def import_kv(self, payload, seq: SequenceState) -> None:
+        self.restore_state(seq, payload["state"])
+
+
+# ===========================================================================
+# Prefill microkernel
+# ===========================================================================
+
+
+class SlotPrefillRunner:
+    def __init__(self, rt: SlotRunner):
+        self.rt = rt
+        # jits keyed on the pow2 chunk bucket (raw length with
+        # bucket_prefill=False) — n_valid rides as a traced operand so one
+        # executable serves every real length within the bucket.
+        self._prefill_jits: Dict[int, Any] = {}
+
+    def prefill_chunk(self, seq: SequenceState, chunk_tokens: List[int]
+                      ) -> Optional[jax.Array]:
+        rt = self.rt
+        c = len(chunk_tokens)
+        cb = pow2_bucket(c) if rt.bucket_prefill else c
+        sub = rt._slot_slice(seq.slot)
+        fn = self._prefill_fn(cb)
+        extra = {k: jnp.asarray(v) for k, v in seq.extra.items()}
+        toks = np.zeros((1, cb), np.int32)
+        toks[0, :c] = chunk_tokens
+        logits, sub = fn(rt.params, jnp.asarray(toks), sub, extra,
+                         jnp.int32(c))
+        rt._slot_write(seq.slot, sub)
+        seq.n_cached += c
+        if seq.n_cached >= seq.n_prompt:
+            return logits[0]
+        return None
+
+    def _prefill_fn(self, cb: int):
+        if cb in self._prefill_jits:
+            return self._prefill_jits[cb]
+        self.rt.prefill_jit_compiles += 1
+        rt = self.rt
+        cfg = rt.cfg
+
+        def run(params, tokens, cache, extra, n_valid):
+            return S.prefill(cfg, params, tokens, cache, n_valid=n_valid,
+                             **extra)
+
+        if rt.mesh is not None:
+            # `extra` (modality stubs) replicates: a single sharding works as
+            # a pytree prefix over the whole dict.
+            run = jax.jit(run, in_shardings=(rt._param_sh, rt._repl,
+                                             rt._cache_sh, rt._repl, rt._repl),
+                          out_shardings=(rt._repl, rt._cache_sh))
+        else:
+            run = jax.jit(run)
+        self._prefill_jits[cb] = run
+        return run
+
+
+# ===========================================================================
+# Decode microkernel
+# ===========================================================================
+
+
+class SlotDecodeRunner:
+    def __init__(self, rt: SlotRunner):
+        self.rt = rt
+        cfg = rt.cfg
+        if rt.mesh is not None:
+            self._decode_jit = jax.jit(
+                lambda p, t, c: S.decode_step(cfg, p, t, c),
+                in_shardings=(rt._param_sh, rt._repl, rt._cache_sh),
+                out_shardings=(rt._repl, rt._cache_sh))
+        else:
+            self._decode_jit = jax.jit(
+                lambda p, t, c: S.decode_step(cfg, p, t, c))
+        self._decode_sample_jit = None
+
+    def decode(self, seqs: List[SequenceState]) -> jax.Array:
+        """Decode all active slots in one batched step; returns logits rows
+        aligned with `seqs` order."""
+        rt = self.rt
+        tokens = np.zeros((rt.n_slots,), np.int32)
+        for s in seqs:
+            tokens[s.slot] = s.tokens[-1]
+        logits, rt.cache = self._decode_jit(rt.params, jnp.asarray(tokens),
+                                            rt.cache)
+        for s in seqs:
+            s.n_cached = len(s.tokens)
+        return logits[jnp.asarray([s.slot for s in seqs])]
+
+    def decode_sample(self, seqs: List[SequenceState], temps, top_ps, key):
+        """Decode + sample fused into ONE dispatch over all slots (ROADMAP
+        carried follow-up: the SlotRunner sampling path, now through
+        ``sampling.sample_core`` in-jit). ``temps``/``top_ps`` are
+        (n_slots,) arrays indexed by SLOT (inactive slots greedy). Returns
+        ((n_slots,) device token vector, chained PRNG key) — the caller
+        gathers its live rows by slot, so logits never reach the host."""
+        rt = self.rt
+        tokens = np.zeros((rt.n_slots,), np.int32)
+        for s in seqs:
+            tokens[s.slot] = s.tokens[-1]
+        fn = self._sample_fn()
+        toks, rt.cache, key = fn(rt.params, jnp.asarray(tokens), rt.cache,
+                                 jnp.asarray(temps), jnp.asarray(top_ps), key)
+        for s in seqs:
+            s.n_cached = len(s.tokens)
+        return toks, key
+
+    def _sample_fn(self):
+        if self._decode_sample_jit is not None:
+            return self._decode_sample_jit
+        self.rt.jit_compiles += 1
+        rt = self.rt
+        cfg = rt.cfg
+        from repro.engine.sampling import greedy_core, sample_core
+
+        def run(params, tokens, cache, temps, top_ps, key):
+            logits, cache = S.decode_step(cfg, params, tokens, cache)
+            key, sub = jax.random.split(key)
+            all_greedy = jnp.all(temps <= 0.0)
+            toks = jax.lax.cond(
+                all_greedy,
+                lambda lg: greedy_core(lg, cfg.vocab_size),
+                lambda lg: sample_core(lg, temps, top_ps, sub,
+                                       cfg.vocab_size),
+                logits)
+            return toks, cache, key
+
+        if rt.mesh is not None:
+            r = rt._repl
+            fn = jax.jit(run, in_shardings=(rt._param_sh, r, rt._cache_sh,
+                                            r, r, r),
+                         out_shardings=(r, rt._cache_sh, r))
+        else:
+            fn = jax.jit(run)
+        self._decode_sample_jit = fn
+        return fn

@@ -20,7 +20,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.engine.kv_cache import OutOfPagesError, pages_needed
-from repro.engine.model_runner import SequenceState
+from repro.engine.runners.base import SequenceState
 from repro.engine.rtc import RelationalTensorCache
 
 
@@ -40,6 +40,7 @@ class SchedulerConfig:
     max_batch_tokens: int = 64          # chunked-prefill token budget / step
     max_decode_batch: int = 8
     chunk_size: int = 16                # prefill chunk granularity
+    max_prefill_seqs: int = 8           # concurrent mid-prefill sequences
     mode: str = "colocated"             # colocated | prefill | decode
 
 
@@ -122,7 +123,7 @@ class Scheduler:
         if self.cfg.mode != "decode":
             # continue in-flight prefills first, then admit from ready
             candidates = list(self.prefilling)
-            while self.ready and len(candidates) < 4:
+            while self.ready and len(candidates) < self.cfg.max_prefill_seqs:
                 candidates.append(self.ready.popleft())
             for seq in candidates:
                 # target = every token but the last (which the decode path

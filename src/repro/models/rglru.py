@@ -48,9 +48,17 @@ def _rglru_coeffs(p: dict, u: jax.Array):
     return a, b
 
 
-def rglru_scan(p: dict, u: jax.Array, h0: jax.Array):
-    """Associative-scan linear recurrence. u: (B,T,W); h0: (B,W)."""
+def rglru_scan(p: dict, u: jax.Array, h0: jax.Array, n_valid=None):
+    """Associative-scan linear recurrence. u: (B,T,W); h0: (B,W).
+
+    Positions >= ``n_valid`` (static or traced) are padding: their steps
+    become exact identities (a -> 1, b -> 0), so every h_t from n_valid-1
+    onward — including the returned final state — equals h_{n_valid-1}."""
     a, b = _rglru_coeffs(p, u)
+    if n_valid is not None:
+        valid = (jnp.arange(u.shape[1]) < n_valid)[None, :, None]
+        a = jnp.where(valid, a, 1.0)
+        b = jnp.where(valid, b, 0.0)
     # fold h0 into the first step: h_1 = a_1 h0 + b_1
     b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
 
@@ -70,9 +78,11 @@ def rglru_step(p: dict, u: jax.Array, h: jax.Array):
     return h, h
 
 
-def conv1d_apply(p: dict, u: jax.Array, conv_state: jax.Array):
+def conv1d_apply(p: dict, u: jax.Array, conv_state: jax.Array, n_valid=None):
     """Depthwise causal conv. u: (B,T,W); conv_state: (B,cw-1,W) trailing
-    inputs from the previous call. Returns (y, new_conv_state)."""
+    inputs from the previous call. Returns (y, new_conv_state). With
+    ``n_valid`` set, new_conv_state carries the cw-1 inputs trailing the
+    last REAL position (pads only corrupt pad outputs, which are unused)."""
     cw = p["conv_w"].shape[0]
     full = jnp.concatenate([conv_state.astype(u.dtype), u], axis=1)   # (B,cw-1+T,W)
     t = u.shape[1]
@@ -80,22 +90,29 @@ def conv1d_apply(p: dict, u: jax.Array, conv_state: jax.Array):
     for i in range(cw):  # static tiny loop (cw = 4)
         y = y + full[:, i:i + t, :].astype(jnp.float32) * p["conv_w"][i].astype(jnp.float32)
     y = y + p["conv_b"].astype(jnp.float32)
-    new_state = full[:, -(cw - 1):, :] if cw > 1 else jnp.zeros_like(conv_state)
+    if cw <= 1:
+        new_state = jnp.zeros_like(conv_state)
+    elif n_valid is None:
+        new_state = full[:, -(cw - 1):, :]
+    else:
+        # token j lives at full[:, (cw-1)+j] ⇒ the run ending at n_valid-1
+        # starts at index n_valid
+        new_state = jax.lax.dynamic_slice_in_dim(full, n_valid, cw - 1, axis=1)
     return y.astype(u.dtype), new_state
 
 
 def rglru_block_apply(p: dict, x: jax.Array, h0: jax.Array, conv_state: jax.Array,
-                      decode: bool = False):
+                      decode: bool = False, n_valid=None):
     """Full Griffin recurrent block: (gelu gate) ⊙ (conv → RG-LRU) → out proj.
     x: (B,T,D). Returns (y, new_h, new_conv_state)."""
     gate = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, p["w_gate_in"]), approximate=True)
     u = jnp.einsum("btd,dw->btw", x, p["w_in"])
-    u, conv_state = conv1d_apply(p, u, conv_state)
+    u, conv_state = conv1d_apply(p, u, conv_state, n_valid=n_valid)
     if decode:
         hseq, h = rglru_step(p, u, h0)
         hseq = hseq[:, None, :]
     else:
-        hseq, h = rglru_scan(p, u, h0)
+        hseq, h = rglru_scan(p, u, h0, n_valid=n_valid)
     y = (hseq.astype(x.dtype) * gate)
     y = jnp.einsum("btw,wd->btd", y, p["w_out"])
     return y, h, conv_state

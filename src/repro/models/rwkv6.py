@@ -139,9 +139,15 @@ def _token_shift(x, last):
 
 
 def rwkv_time_mix(p: dict, x: jax.Array, head_dim: int, state, last_x,
-                  chunked: bool = True, chunk: int = 64, unroll: bool = False):
+                  chunked: bool = True, chunk: int = 64, unroll: bool = False,
+                  n_valid=None):
     """x: (B,T,D). state: (B,H,hd,hd). last_x: (B,D) previous token input.
-    Returns (y, new_state, new_last_x)."""
+    Returns (y, new_state, new_last_x).
+
+    ``n_valid`` (static or traced scalar) marks positions >= n_valid as
+    padding: their recurrence steps become exact identities (w -> 1,
+    k -> 0, so S_t = diag(1)S + 0 = S) and new_last_x gathers at
+    n_valid-1 — the bucketed-prefill contract (DESIGN.md §12)."""
     b, t, d = x.shape
     h = d // head_dim
     xs = _token_shift(x, last_x)
@@ -160,6 +166,11 @@ def rwkv_time_mix(p: dict, x: jax.Array, head_dim: int, state, last_x,
     dec = p["decay_base"] + jnp.einsum(
         "btd,dr,re->bte", cast(xw), p["decay_lora_a"], p["decay_lora_b"]).astype(jnp.float32)
     w = jnp.exp(-jnp.exp(dec)).reshape(b, t, h, head_dim)  # (0,1) per channel
+    if n_valid is not None:
+        # same padding constants wkv_chunked uses for its own chunk tail
+        valid = (jnp.arange(t) < n_valid)[None, :, None, None]
+        w = jnp.where(valid, w, 1.0)
+        k = jnp.where(valid, k, 0.0)
 
     fn = wkv_chunked if chunked else wkv_sequential
     if chunked:
@@ -173,14 +184,22 @@ def rwkv_time_mix(p: dict, x: jax.Array, head_dim: int, state, last_x,
     y32 = (y32 - mu) * jax.lax.rsqrt(var + 1e-5)
     y = (y32.reshape(b, t, d) * p["ln_x"]).astype(x.dtype) * g
     y = jnp.einsum("btd,de->bte", y, p["wo"])
-    return y, state, x[:, -1, :]
+    return y, state, _last_valid(x, n_valid)
 
 
-def rwkv_channel_mix(p: dict, x: jax.Array, last_x):
+def _last_valid(x, n_valid):
+    """x[:, n_valid-1, :] with a possibly-traced n_valid (the carried
+    last-token input must come from the last REAL position, not the pad)."""
+    if n_valid is None:
+        return x[:, -1, :]
+    return jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)[:, 0, :]
+
+
+def rwkv_channel_mix(p: dict, x: jax.Array, last_x, n_valid=None):
     xs = _token_shift(x, last_x)
     delta = (xs - x).astype(jnp.float32)
     xk = (x.astype(jnp.float32) + delta * p["cm_mix"][0]).astype(x.dtype)
     xr = (x.astype(jnp.float32) + delta * p["cm_mix"][1]).astype(x.dtype)
     kk = jnp.square(jax.nn.relu(jnp.einsum("btd,df->btf", xk, p["cm_k"])))
     rr = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["cm_r"]).astype(jnp.float32)).astype(x.dtype)
-    return rr * jnp.einsum("btf,fd->btd", kk, p["cm_v"]), x[:, -1, :]
+    return rr * jnp.einsum("btf,fd->btd", kk, p["cm_v"]), _last_valid(x, n_valid)

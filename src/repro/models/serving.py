@@ -86,15 +86,23 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 def prefill(cfg: ModelConfig, params, tokens: jax.Array, cache: Cache,
             vision_embeds: Optional[jax.Array] = None,
             frames: Optional[jax.Array] = None,
-            attn_impl: str = "auto") -> Tuple[jax.Array, Cache]:
+            attn_impl: str = "auto", n_valid=None) -> Tuple[jax.Array, Cache]:
     """Process a prompt chunk starting at cache['length'] (per sequence).
     Returns (last-position logits (B, Vp), updated cache).
 
     Attention within the chunk sees fresh activations (flash path); tokens
     also attend to previously cached context when cache['length'] > 0 by
     concatenating the cached prefix (engine chunked-prefill path).
+
+    ``n_valid`` (static or traced scalar, bucketed-prefill contract,
+    DESIGN.md §12): only the first n_valid of the s chunk positions are
+    real. Pad positions are masked out of attention by position sentinels,
+    made exact identity steps in the recurrences, and excluded from the
+    length/logits bookkeeping — their (garbage) KV writes land in slots a
+    later chunk overwrites or decode masks by length.
     """
     b, s = tokens.shape
+    nv = s if n_valid is None else n_valid
     start = cache["length"]
     positions = start[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
     x = T.embed(cfg, params, tokens)
@@ -110,15 +118,23 @@ def prefill(cfg: ModelConfig, params, tokens: jax.Array, cache: Cache,
         _fill_cross_cache(cfg, params["cross_blocks"], mem, new_cache)
 
     if cfg.attn_kind == "rwkv":
-        x, new_cache = _rwkv_prefill(cfg, params, x, new_cache)
+        x, new_cache = _rwkv_prefill(cfg, params, x, new_cache, n_valid)
     elif cfg.attn_kind == "hybrid_rglru":
-        x, new_cache = _rglru_prefill(cfg, params, x, positions, new_cache, attn_impl)
+        x, new_cache = _rglru_prefill(cfg, params, x, positions, new_cache,
+                                      attn_impl, n_valid)
     else:
+        # pads need no explicit masking here: their cache writes sit at
+        # positions > every real query (causally excluded) and are
+        # overwritten by the next chunk / masked by `length` at decode.
         x, new_cache = _attn_prefill(cfg, params, x, positions, new_cache,
                                      attn_impl, wins, kinds)
 
-    new_cache["length"] = start + s
-    logits = T.unembed(cfg, params, x[:, -1:, :])
+    new_cache["length"] = start + nv
+    if n_valid is None:
+        x_last = x[:, -1:, :]
+    else:
+        x_last = jax.lax.dynamic_slice_in_dim(x, nv - 1, 1, axis=1)
+    logits = T.unembed(cfg, params, x_last)
     return logits[:, 0, :], new_cache
 
 
@@ -203,13 +219,14 @@ def _post_attn(cfg, p, o):
     return o
 
 
-def _rwkv_prefill(cfg, params, x, cache):
+def _rwkv_prefill(cfg, params, x, cache, n_valid=None):
     from repro.models.transformer import rwkv_block_apply
 
     def body(carry, xs):
         h = carry
         p, st, ltm, lcm = xs
-        h, st, ltm, lcm = rwkv_block_apply(cfg, p, h, st, ltm, lcm, chunked=True)
+        h, st, ltm, lcm = rwkv_block_apply(cfg, p, h, st, ltm, lcm, chunked=True,
+                                           n_valid=n_valid)
         return h, (st, ltm, lcm)
 
     x, (st, ltm, lcm) = jax.lax.scan(body, x, (params["blocks"], cache["state"],
@@ -219,7 +236,7 @@ def _rwkv_prefill(cfg, params, x, cache):
     return x, cache
 
 
-def _rglru_prefill(cfg, params, x, positions, cache, attn_impl):
+def _rglru_prefill(cfg, params, x, positions, cache, attn_impl, n_valid=None):
     from repro.models.transformer import attn_block_apply, rglru_block_apply
     start = cache["length"]
     ck, cv = cache.get("k"), cache.get("v")
@@ -229,7 +246,8 @@ def _rglru_prefill(cfg, params, x, positions, cache, attn_impl):
     for kind in cfg.layer_kinds():
         if kind == "rglru":
             p = params["rglru_blocks"][ri]
-            x, h_i, c_i = T.rglru_block_apply(cfg, p, x, hs[ri], convs[ri])
+            x, h_i, c_i = T.rglru_block_apply(cfg, p, x, hs[ri], convs[ri],
+                                              n_valid=n_valid)
             new_h.append(h_i)
             new_conv.append(c_i)
             ri += 1

@@ -249,19 +249,22 @@ def memory_kv(cfg: ModelConfig, p_attn: dict, mem: jax.Array) -> Tuple[jax.Array
 
 
 def rwkv_block_apply(cfg: ModelConfig, p: dict, x, state, last_tm, last_cm,
-                     chunked=True, unroll_probe=False):
+                     chunked=True, unroll_probe=False, n_valid=None):
     h = L.apply_norm(x, p["ln1"], cfg.norm)
     y, state, last_tm = R.rwkv_time_mix(p["tm"], h, cfg.rwkv.head_dim, state, last_tm,
-                                        chunked=chunked, unroll=unroll_probe)
+                                        chunked=chunked, unroll=unroll_probe,
+                                        n_valid=n_valid)
     x = x + y
     h = L.apply_norm(x, p["ln2"], cfg.norm)
-    y, last_cm = R.rwkv_channel_mix(p["tm"], h, last_cm)
+    y, last_cm = R.rwkv_channel_mix(p["tm"], h, last_cm, n_valid=n_valid)
     return x + y, state, last_tm, last_cm
 
 
-def rglru_block_apply(cfg: ModelConfig, p: dict, x, h0, conv_state, decode=False):
+def rglru_block_apply(cfg: ModelConfig, p: dict, x, h0, conv_state, decode=False,
+                      n_valid=None):
     h = L.apply_norm(x, p["ln1"], cfg.norm)
-    y, h0, conv_state = G.rglru_block_apply(p["rec"], h, h0, conv_state, decode=decode)
+    y, h0, conv_state = G.rglru_block_apply(p["rec"], h, h0, conv_state, decode=decode,
+                                            n_valid=n_valid)
     x = x + y
     h = L.apply_norm(x, p["ln2"], cfg.norm)
     return x + L.mlp_apply(p["mlp"], h, cfg.mlp_act), h0, conv_state
